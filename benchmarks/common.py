@@ -1,0 +1,39 @@
+"""Shared testbed/policy cache so each table reuses one sweep."""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+
+from repro.core.config import TestbedConfig
+from repro.core.experiment import run_experiment
+
+ART_DIR = Path(__file__).resolve().parent / "artifacts"
+
+
+@functools.lru_cache(maxsize=1)
+def canonical_results():
+    """One full experiment on the canonical testbed (N=200 eval)."""
+    cfg = TestbedConfig()
+    res, extras, logs = run_experiment(
+        cfg, include_mitigation=True, refusal_cap=0.45, verbose=False)
+    return cfg, res, extras, logs
+
+
+def save_artifact(name: str, obj) -> Path:
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    p = ART_DIR / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1))
+    return p
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def bar(x: float, scale: float = 50) -> str:
+    n = max(0, int(x * scale))
+    return "#" * n

@@ -1,0 +1,48 @@
+"""Beyond paper: one SLO-conditioned policy vs per-profile policies,
+including generalization to an UNSEEN interpolated profile."""
+import numpy as np
+
+from benchmarks.common import canonical_results, save_artifact
+from repro.core.actions import SLO_PROFILES
+from repro.core.conditioned import (conditioned_actions, interpolate,
+                                    train_conditioned)
+from repro.core.metrics import best_fixed_action, evaluate_actions
+from repro.core.policy import policy_actions, train_policy
+
+
+def main() -> dict:
+    cfg, _, _, (train_log, eval_log) = canonical_results()
+    profiles = [SLO_PROFILES["quality_first"], SLO_PROFILES["cheap"]]
+    result, ccfg = train_conditioned(train_log, profiles, cfg.router)
+
+    rows = []
+    for p in profiles + [interpolate(profiles[0], profiles[1], 0.5)]:
+        acts_c = conditioned_actions(result, ccfg, eval_log, p)
+        rep_c = evaluate_actions(eval_log, acts_c, p, f"conditioned@{p.name}")
+        rows.append(rep_c.row())
+        # per-profile specialist for comparison (seen profiles only)
+        if p.name in SLO_PROFILES:
+            tr = train_policy(train_log, train_log.rewards(p), cfg.router,
+                              objective="argmax_ce")
+            acts_s = policy_actions(tr.params, eval_log.states, cfg.router)
+            rows.append(evaluate_actions(eval_log, acts_s, p,
+                                         f"specialist@{p.name}").row())
+        _, bf = best_fixed_action(eval_log, p)
+        rows.append({**bf.row(), "method": f"best-fixed@{p.name}"})
+
+    save_artifact("conditioned_policy", rows)
+    for r in rows:
+        print(f"{r['method']:38s} reward={r['reward']:+8.4f} "
+              f"acc={r['acc']:.3f} cost={r['cost']:7.1f} "
+              f"refuse={r['refuse']:.2f}")
+    cond = {r["method"]: r for r in rows}
+    gap_q = (cond["conditioned@quality_first"]["reward"]
+             - cond["specialist@quality_first"]["reward"])
+    return {"conditioned_vs_specialist_quality_gap": round(gap_q, 4),
+            "unseen_mix_reward":
+                cond[[k for k in cond if k.startswith("conditioned@mix")][0]]
+                ["reward"]}
+
+
+if __name__ == "__main__":
+    print(main())

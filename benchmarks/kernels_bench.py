@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On CPU the numbers measure the reference path and interpret overhead —
+the structural artifact (block shapes, VMEM footprint per tile) is the
+TPU-relevant output.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.kernels import ref
+from repro.kernels.ops import bm25_scores
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> dict:
+    out = {}
+    # BM25 scoring at the paper testbed scale
+    Q, D, V = 8, 640, 4096
+    key = jax.random.PRNGKey(0)
+    qtf = (jax.random.uniform(key, (Q, V)) < 0.003).astype(jnp.float32)
+    tf = jnp.round(jax.random.uniform(key, (D, V)) * 3)
+    dl = tf.sum(1)
+    idf = jax.random.uniform(key, (V,)) + 0.1
+
+    t_pallas = _time(lambda: bm25_scores(qtf, tf, dl, idf))
+    k1, b = 1.2, 0.75
+    norm = (k1 * (1 - b + b * dl / (dl.mean() + 1e-6)))[:, None]
+    ref_fn = jax.jit(lambda: ref.bm25_ref(qtf * idf[None], tf, norm))
+    t_ref = _time(ref_fn)
+    out["bm25"] = {"us_pallas_interp": round(t_pallas, 1),
+                   "us_jnp_ref": round(t_ref, 1),
+                   "shape": f"Q{Q}xD{D}xV{V}",
+                   "vmem_tile_bytes": (8 * 512 + 128 * 512 + 8 * 128) * 4}
+
+    # flash attention tile accounting (structural)
+    for (bq, bkv, d) in [(128, 128, 128), (256, 512, 128)]:
+        vmem = (bq * d + 2 * bkv * d + bq * d + bq * 2) * 4
+        out[f"flash_tile_{bq}x{bkv}"] = {
+            "vmem_bytes_per_tile": vmem,
+            "fits_16MB_vmem": vmem < 16 * 2**20}
+
+    save_artifact("kernels_bench", out)
+    for k, v in out.items():
+        print(k, v)
+    return {"bm25_us": out["bm25"]["us_pallas_interp"]}
+
+
+if __name__ == "__main__":
+    print(main())

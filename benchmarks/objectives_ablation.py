@@ -1,0 +1,46 @@
+"""The paper's namesake: objective ablation.
+
+All four policy objectives (Argmax-CE, Argmax-CE-WT, reward-softmax
+soft targets, constrained CE) under both SLO profiles on the canonical
+testbed — the full grid behind the paper's "objective choice strongly
+shapes learned behavior" conclusion.
+"""
+from benchmarks.common import canonical_results, save_artifact
+from repro.core.actions import SLO_PROFILES
+from repro.core.metrics import best_fixed_action, evaluate_actions
+from repro.core.policy import policy_actions, train_policy
+
+OBJECTIVES = ("argmax_ce", "argmax_ce_wt", "soft_reward", "constrained")
+
+
+def main() -> dict:
+    cfg, _, _, (train_log, eval_log) = canonical_results()
+    rows = []
+    for slo, profile in SLO_PROFILES.items():
+        rewards = train_log.rewards(profile)
+        _, bf = best_fixed_action(eval_log, profile)
+        rows.append({"slo": slo, **bf.row()})
+        for obj in OBJECTIVES:
+            tr = train_policy(train_log, rewards, cfg.router, objective=obj,
+                              refusal_cap=0.45)
+            acts = policy_actions(tr.params, eval_log.states, cfg.router)
+            rep = evaluate_actions(eval_log, acts, profile, obj)
+            rows.append({"slo": slo, **rep.row()})
+    save_artifact("objectives_ablation", rows)
+    print(f"{'slo':>14s} {'objective':>16s} {'acc':>6s} {'cost':>8s} "
+          f"{'reward':>8s} {'refuse':>7s}")
+    for r in rows:
+        print(f"{r['slo']:>14s} {r['method']:>16s} {r['acc']:6.3f} "
+              f"{r['cost']:8.1f} {r['reward']:+8.4f} {r['refuse']:7.3f}")
+    by = {(r["slo"], r["method"]): r for r in rows}
+    return {
+        "cheap_soft_reward_refusal": by[("cheap", "soft_reward")]["refuse"],
+        "cheap_constrained_refusal": by[("cheap", "constrained")]["refuse"],
+        "quality_best_objective": max(
+            (r for r in rows if r["slo"] == "quality_first"),
+            key=lambda r: r["reward"])["method"],
+    }
+
+
+if __name__ == "__main__":
+    print(main())

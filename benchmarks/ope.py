@@ -1,0 +1,36 @@
+"""Beyond-paper (§8 future work): counterfactual estimators (IPS / SNIPS /
+Doubly-Robust) evaluated against the exactly-known policy value."""
+import numpy as np
+
+from benchmarks.common import canonical_results, save_artifact
+from repro.core.actions import SLO_PROFILES
+from repro.core.ope import estimator_suite
+from repro.core.policy import policy_actions, train_policy
+
+
+def main() -> dict:
+    cfg, _, _, (train_log, eval_log) = canonical_results()
+    profile = SLO_PROFILES["quality_first"]
+    tr = train_policy(train_log, train_log.rewards(profile), cfg.router,
+                      objective="argmax_ce")
+    target = policy_actions(tr.params, eval_log.states, cfg.router)
+    rewards = eval_log.rewards(profile)
+    out = {}
+    for kind in ("uniform", "eps_anchor"):
+        out[kind] = estimator_suite(rewards, eval_log.states, target,
+                                    kind=kind, seeds=30)
+    save_artifact("ope", out)
+    print(f"{'logging':>11s} {'estimator':>10s} {'value':>8s} {'bias':>8s} {'rmse':>8s}")
+    for kind, suite in out.items():
+        for est, stats in suite.items():
+            print(f"{kind:>11s} {est:>10s} {stats['value']:+8.4f} "
+                  f"{stats['bias']:+8.4f} {stats['rmse']:8.4f}")
+    return {
+        "snips_rmse_uniform": round(out["uniform"]["snips"]["rmse"], 4),
+        "ips_rmse_uniform": round(out["uniform"]["ips"]["rmse"], 4),
+        "dr_rmse_uniform": round(out["uniform"]["dr"]["rmse"], 4),
+    }
+
+
+if __name__ == "__main__":
+    print(main())

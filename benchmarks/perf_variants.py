@@ -1,0 +1,67 @@
+"""§Perf before/after table, regenerated from the dry-run records."""
+import json
+from pathlib import Path
+
+from benchmarks.common import save_artifact
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+PAIRS = [
+    ("H1 it1 cf=1.0", "deepseek-v3-671b__train_4k__single",
+     "deepseek-v3-671b__train_4k__single_cf10"),
+    ("H1 it3 scatter-down", "deepseek-v3-671b__train_4k__single",
+     "deepseek-v3-671b__train_4k__single_cf10_bf16_scat"),
+    ("H2 pad-heads qwen prefill", "qwen1.5-32b__prefill_32k__single",
+     "qwen1.5-32b__prefill_32k__single_padheads"),
+    ("H2 pad-heads qwen train", "qwen1.5-32b__train_4k__single",
+     "qwen1.5-32b__train_4k__single_padheads"),
+    ("H2 pad-heads minicpm3 prefill", "minicpm3-4b__prefill_32k__single",
+     "minicpm3-4b__prefill_32k__single_padheads"),
+    ("H2 pad-heads minicpm3 train", "minicpm3-4b__train_4k__single",
+     "minicpm3-4b__train_4k__single_padheads"),
+    ("H2 pad-heads whisper train", "whisper-large-v3__train_4k__single",
+     "whisper-large-v3__train_4k__single_padheads"),
+    ("H2 pad-heads whisper prefill", "whisper-large-v3__prefill_32k__single",
+     "whisper-large-v3__prefill_32k__single_padheads"),
+    ("H3 mla-absorb minicpm3 decode", "minicpm3-4b__decode_32k__single",
+     "minicpm3-4b__decode_32k__single_absorb"),
+    ("H3 mla-absorb deepseek decode", "deepseek-v3-671b__decode_32k__single",
+     "deepseek-v3-671b__decode_32k__single_absorb"),
+    ("H4 window-ring gemma3 500k", "gemma3-12b__long_500k__single",
+     "gemma3-12b__long_500k__single_ring"),
+    ("H6 one-hot embed (REFUTED)", "command-r-35b__train_4k__single",
+     "command-r-35b__train_4k__single_onehot"),
+]
+
+
+def _load(name):
+    return json.loads((DRYRUN / f"{name}.json").read_text())
+
+
+def main() -> dict:
+    rows = []
+    print(f"{'iteration':>32s} {'temp GiB':>18s} {'coll B/body':>22s} "
+          f"{'HLO flops':>22s}")
+    for label, base, var in PAIRS:
+        if not (DRYRUN / f"{var}.json").exists():
+            continue
+        b, v = _load(base), _load(var)
+        tb = b["temp_size_in_bytes"] / 2**30
+        tv = v["temp_size_in_bytes"] / 2**30
+        cb = sum(b["collective_bytes"].values())
+        cv = sum(v["collective_bytes"].values())
+        fb, fv = b["flops"], v["flops"]
+        rows.append({"iteration": label,
+                     "temp_gib": [round(tb, 2), round(tv, 2)],
+                     "coll_bytes": [cb, cv],
+                     "flops": [fb, fv]})
+        print(f"{label:>32s} {tb:8.2f}→{tv:8.2f} {cb:10.3g}→{cv:10.3g} "
+              f"{fb:10.3g}→{fv:10.3g}")
+    save_artifact("perf_variants", rows)
+    best = max(rows, key=lambda r: r["temp_gib"][0] / max(r["temp_gib"][1], 1e-9))
+    return {"n_variants": len(rows),
+            "biggest_temp_reduction": best["iteration"]}
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,27 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run."""
+from benchmarks.common import save_artifact
+from repro.analysis.roofline import full_table
+
+
+def main() -> dict:
+    rows = full_table("single")
+    out = [r.as_dict() for r in rows]
+    save_artifact("roofline", out)
+    multi = full_table("multi")
+    if multi:
+        save_artifact("roofline_multi", [r.as_dict() for r in multi])
+    hdr = (f"{'arch':>22s} {'shape':>12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'dominant':>10s} {'useful':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r.arch:>22s} {r.shape:>12s} {r.compute_s:10.4f} "
+              f"{r.memory_s:10.4f} {r.collective_s:10.4f} {r.dominant:>10s} "
+              f"{r.useful_ratio:7.3f}")
+    doms = {}
+    for r in rows:
+        doms[r.dominant] = doms.get(r.dominant, 0) + 1
+    return {"n_pairs": len(rows), "dominant_histogram": doms}
+
+
+if __name__ == "__main__":
+    print(main())

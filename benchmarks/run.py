@@ -1,0 +1,53 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark) after
+each benchmark's own report.  Artifacts land in benchmarks/artifacts/.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1 ope # a subset
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks import (conditioned_policy, fig1_action_dist,
+                        fig2_cost_quality, fig3_reward, kernels_bench,
+                        mitigation, objectives_ablation, ope, pareto_sweep,
+                        perf_variants, roofline, seeds_ablation,
+                        table1_slo_grid)
+
+BENCHMARKS = {
+    "table1": table1_slo_grid.main,     # paper Table 1
+    "fig1": fig1_action_dist.main,      # paper Figure 1
+    "fig2": fig2_cost_quality.main,     # paper Figure 2
+    "fig3": fig3_reward.main,           # paper Figure 3
+    "mitigation": mitigation.main,      # paper §7.1 mitigation
+    "objectives": objectives_ablation.main,  # paper's objective ablation
+    "ope": ope.main,                    # beyond paper (§8 future work)
+    "conditioned": conditioned_policy.main,  # beyond paper
+    "pareto": pareto_sweep.main,        # beyond paper: collapse onset
+    "seeds": seeds_ablation.main,       # beyond paper: §8 uncertainty
+    "kernels": kernels_bench.main,      # kernel micro-bench
+    "roofline": roofline.main,          # §Roofline table
+    "perf": perf_variants.main,         # §Perf before/after from records
+}
+
+
+def main() -> None:
+    names = [a for a in sys.argv[1:] if a in BENCHMARKS] or list(BENCHMARKS)
+    rows = []
+    for name in names:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        derived = BENCHMARKS[name]()
+        us = (time.time() - t0) * 1e6
+        rows.append((name, us, derived))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{json.dumps(derived)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Quickstart: the paper in miniature (~1 minute on CPU).
+
+Builds a small synthetic SQuAD-2.0 testbed, generates the offline
+action-sweep log, trains Argmax-CE under both SLO profiles, and prints
+the cost/quality table — including the refusal-collapse failure mode.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.config import RouterConfig, TestbedConfig
+from repro.core.experiment import run_experiment
+
+
+def main():
+    cfg = TestbedConfig(n_train=300, n_eval=100, n_paragraphs=300,
+                        router=RouterConfig(n_epochs=15))
+    res, extras, _ = run_experiment(cfg, verbose=True)
+    print("\nAction distributions (Fig 1):")
+    for k, d in extras["action_dists"].items():
+        print(f"  {k:28s} {[round(x, 2) for x in d]}")
+    ce_cheap = [r for r in res.rows
+                if r["slo"] == "cheap" and r["method"] == "argmax_ce"][0]
+    print(f"\nRefusal collapse under cheap SLO: refusal_rate="
+          f"{ce_cheap['refuse']:.2f}, acc={ce_cheap['acc']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

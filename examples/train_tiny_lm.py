@@ -1,0 +1,19 @@
+"""Train a reduced-family model end-to-end on CPU for a few hundred
+steps (any of the 10 assigned architectures via --arch).
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --arch mamba2-130m \
+        --steps 200
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "200"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

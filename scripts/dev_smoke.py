@@ -1,0 +1,53 @@
+"""Dev scratch: forward/train/decode one step for every SMOKE config."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.transformer import loss_fn
+
+
+def batch_for(cfg, B=2, S=32):
+    key = jax.random.PRNGKey(1)
+    S_txt = S - (cfg.n_modality_tokens if cfg.modality == "vision" else 0)
+    inputs = {"tokens": jax.random.randint(key, (B, S_txt), 0, cfg.vocab_size)}
+    if cfg.modality == "vision":
+        inputs["image_emb"] = jax.random.normal(
+            key, (B, cfg.n_modality_tokens, cfg.modality_embed_dim), jnp.bfloat16)
+    if cfg.modality == "audio":
+        inputs["audio_emb"] = jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    labels = jax.random.randint(key, (B, S_txt), 0, cfg.vocab_size)
+    return inputs, labels
+
+
+def main():
+    only = sys.argv[1:] or ARCH_IDS
+    for arch in only:
+        cfg = get_config(arch, "smoke")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        inputs, labels = batch_for(cfg)
+        # train forward
+        logits, extras = model.train_logits(params, inputs)
+        loss = loss_fn(logits, labels, extras=extras)
+        assert np.isfinite(float(loss)), (arch, float(loss))
+        # decode path: prefill 8 tokens then 2 decode steps
+        B = 2
+        cache = model.init_cache(B, 64)
+        pre_in = dict(inputs)
+        pre_in["tokens"] = inputs["tokens"][:, :8]
+        lg, cache = model.prefill(params, pre_in, cache)
+        assert np.all(np.isfinite(np.asarray(lg, np.float32))), arch
+        for i in range(2):
+            tok = jnp.argmax(lg[:, -1], axis=-1)[:, None]
+            lg, cache = model.decode(params, {"tokens": tok}, cache)
+        print(f"OK {arch:24s} loss={float(loss):.3f} "
+              f"params={model.n_params():,}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Assigned-architecture configs (``--arch <id>``) + the paper testbed.
+
+Each module exposes ``FULL`` (the exact assigned configuration, cited)
+and ``SMOKE`` (a reduced same-family variant: ≤2 layers, d_model ≤ 512,
+≤4 experts) used by the per-arch CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.core.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "dbrx-132b",
+    "minicpm3-4b",
+    "whisper-large-v3",
+    "jamba-1.5-large-398b",
+    "phi-3-vision-4.2b",
+    "command-r-35b",
+    "mamba2-130m",
+    "deepseek-v3-671b",
+    "gemma3-12b",
+    "qwen1.5-32b",
+]
+
+_MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str, variant: str = "full") -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return getattr(mod, variant.upper())
+
+
+# Input shapes assigned to this paper (global batch × sequence).
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# long_500k needs sub-quadratic attention / bounded KV growth — see
+# DESIGN.md §Dry-run shape skips.
+LONG_CONTEXT_ARCHS = {"mamba2-130m", "jamba-1.5-large-398b", "gemma3-12b"}
+
+
+def shape_supported(arch_id: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch_id in LONG_CONTEXT_ARCHS
+    return True

@@ -1,0 +1,65 @@
+"""The paper's action space and SLO profiles (§3.1, §3.2)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.config import SLOProfile
+
+
+@dataclass(frozen=True)
+class Action:
+    idx: int
+    k: int            # retrieval depth (0 = no retrieval)
+    mode: str         # guarded | auto | refuse
+
+
+# Action 0..4 exactly as in the paper §3.1.
+ACTIONS = (
+    Action(0, 2, "guarded"),
+    Action(1, 5, "guarded"),
+    Action(2, 10, "guarded"),
+    Action(3, 5, "auto"),
+    Action(4, 0, "refuse"),
+)
+N_ACTIONS = len(ACTIONS)
+REFUSE_ACTION = 4
+
+
+# SLO profiles (§3.2): quality_first weighs correctness / hallucination
+# avoidance; cheap weighs token cost and rewards refusal heavily — the
+# configuration under which the paper observes refusal collapse.
+SLO_PROFILES: Dict[str, SLOProfile] = {
+    "quality_first": SLOProfile(
+        name="quality_first",
+        w_acc=1.0, w_cost=0.1, w_hall=0.25, w_ref=0.1, w_ref_wrong=0.15),
+    "cheap": SLOProfile(
+        name="cheap",
+        w_acc=0.3, w_cost=0.8, w_hall=0.3, w_ref=0.35, w_ref_wrong=1.0),
+}
+
+
+def reward(profile: SLOProfile, *, correct: bool, cost_tokens: float,
+           hallucinated: bool, refused: bool, answerable: bool,
+           pre_retrieval: bool = False) -> float:
+    """Eq. (1):  r = w_acc·Acc − w_cost·Cost − w_hall·Hall + w_ref·Ref.
+
+    Ref credits correct refusals and penalizes incorrect ones (paper
+    §3.2: "captures correct refusals (and penalizes incorrect
+    refusals)").  Pre-retrieval refusals earn scaled credit (§3.1's
+    refusal-semantics distinction).
+    """
+    acc = 1.0 if correct else 0.0
+    hall = 1.0 if hallucinated else 0.0
+    if refused:
+        if answerable:
+            ref = -profile.w_ref_wrong
+        else:
+            ref = profile.w_ref * (profile.w_ref_pre_scale
+                                   if pre_retrieval else 1.0)
+    else:
+        ref = 0.0
+    return (profile.w_acc * acc
+            - profile.w_cost * cost_tokens / profile.cost_scale
+            - profile.w_hall * hall
+            + ref)

@@ -1,0 +1,78 @@
+"""End-to-end paper experiment: build testbed → train policies → report.
+
+Reproduces the paper's Table 1 grid: {quality_first, cheap} ×
+{Baseline(a1), Best-fixed, Argmax-CE, Argmax-CE-WT} (+ beyond-paper
+objectives), and the Figure 1 action distributions.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.actions import SLO_PROFILES
+from repro.core.config import RouterConfig, TestbedConfig
+from repro.core.metrics import (PolicyReport, best_fixed_action,
+                                evaluate_actions, fixed_action_report)
+from repro.core.offline_log import OfflineLog, build_testbed
+from repro.core.policy import policy_actions, train_policy
+
+
+@dataclass
+class ExperimentResult:
+    rows: List[dict] = field(default_factory=list)
+
+    def add(self, slo: str, report: PolicyReport):
+        self.rows.append({"slo": slo, **report.row()})
+
+    def table(self) -> str:
+        cols = ["slo", "method", "acc", "cost", "reward", "refuse",
+                "hall", "hit"]
+        lines = [" | ".join(f"{c:>13s}" for c in cols)]
+        for r in self.rows:
+            lines.append(" | ".join(f"{str(r[c]):>13s}" for c in cols))
+        return "\n".join(lines)
+
+    def save(self, path):
+        Path(path).write_text(json.dumps(self.rows, indent=1))
+
+
+def run_experiment(cfg: Optional[TestbedConfig] = None,
+                   objectives=("argmax_ce", "argmax_ce_wt"),
+                   include_mitigation: bool = False,
+                   refusal_cap: float = 0.5,
+                   verbose: bool = True):
+    cfg = cfg or TestbedConfig()
+    data, index, pipe, train_log, eval_log = build_testbed(cfg)
+    res = ExperimentResult()
+    extras: Dict[str, dict] = {"train_hist": {}, "action_dists": {}}
+
+    for slo_name, profile in SLO_PROFILES.items():
+        # fixed baselines (paper §5.3)
+        res.add(slo_name, fixed_action_report(eval_log, 1, profile,
+                                              "baseline(a1)"))
+        bf_a, bf_rep = best_fixed_action(eval_log, profile)
+        res.add(slo_name, bf_rep)
+
+        train_rewards = train_log.rewards(profile)
+        objs = list(objectives)
+        if include_mitigation:
+            objs.append("constrained")
+        for obj in objs:
+            tr = train_policy(train_log, train_rewards, cfg.router,
+                              objective=obj, refusal_cap=refusal_cap)
+            acts = policy_actions(tr.params, eval_log.states, cfg.router)
+            rep = evaluate_actions(eval_log, acts, profile, obj)
+            res.add(slo_name, rep)
+            extras["train_hist"][f"{slo_name}/{obj}"] = tr.history[-1]
+            extras["action_dists"][f"{slo_name}/{obj}"] = \
+                [float(x) for x in rep.action_dist]
+        if verbose:
+            print(f"[{slo_name}] best fixed = a{bf_a}")
+
+    if verbose:
+        print(res.table())
+    return res, extras, (train_log, eval_log)

@@ -1,0 +1,115 @@
+"""Offline log generation (paper §4.1) and the logged-replay dataset.
+
+For every question we execute ALL actions ("full action sweep") and
+store per-action metrics; rewards are recomputed per SLO profile from
+the stored indicators, exactly as the paper regenerates rewards without
+re-calling the generator.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.actions import ACTIONS, N_ACTIONS, reward
+from repro.core.config import RouterConfig, SLOProfile, TestbedConfig
+from repro.core.features import state_vector
+from repro.data.synthetic_squad import Question, SyntheticSquad
+from repro.data.tokenizer import HashTokenizer
+from repro.generation.simulator import SimulatedGenerator
+from repro.retrieval.bm25 import BM25Index
+from repro.serving.pipeline import RAGPipeline
+
+
+@dataclass
+class OfflineLog:
+    states: np.ndarray        # (N, state_dim)
+    correct: np.ndarray       # (N, A) bool
+    refused: np.ndarray       # (N, A) bool
+    hallucinated: np.ndarray  # (N, A) bool
+    cost: np.ndarray          # (N, A) float
+    hit: np.ndarray           # (N, A) bool
+    answerable: np.ndarray    # (N,) bool
+    qids: np.ndarray          # (N,)
+
+    @property
+    def n(self) -> int:
+        return len(self.qids)
+
+    def rewards(self, profile: SLOProfile) -> np.ndarray:
+        """(N, A) reward matrix under an SLO profile (eq. 1)."""
+        r = np.zeros((self.n, N_ACTIONS), np.float32)
+        for i in range(self.n):
+            for a in range(N_ACTIONS):
+                r[i, a] = reward(
+                    profile,
+                    correct=bool(self.correct[i, a]),
+                    cost_tokens=float(self.cost[i, a]),
+                    hallucinated=bool(self.hallucinated[i, a]),
+                    refused=bool(self.refused[i, a]),
+                    answerable=bool(self.answerable[i]),
+                    pre_retrieval=(a == 4))
+        return r
+
+    def subset(self, idx: np.ndarray) -> "OfflineLog":
+        return OfflineLog(self.states[idx], self.correct[idx],
+                          self.refused[idx], self.hallucinated[idx],
+                          self.cost[idx], self.hit[idx],
+                          self.answerable[idx], self.qids[idx])
+
+    def save(self, path: str | Path):
+        np.savez_compressed(path, **{k: getattr(self, k) for k in (
+            "states", "correct", "refused", "hallucinated", "cost", "hit",
+            "answerable", "qids")})
+
+    @classmethod
+    def load(cls, path: str | Path) -> "OfflineLog":
+        z = np.load(path)
+        return cls(**{k: z[k] for k in z.files})
+
+
+def generate_log(questions: Sequence[Question], pipeline: RAGPipeline,
+                 index: BM25Index, router_cfg: RouterConfig) -> OfflineLog:
+    n = len(questions)
+    states = np.zeros((n, router_cfg.state_dim), np.float32)
+    correct = np.zeros((n, N_ACTIONS), bool)
+    refused = np.zeros((n, N_ACTIONS), bool)
+    hall = np.zeros((n, N_ACTIONS), bool)
+    cost = np.zeros((n, N_ACTIONS), np.float32)
+    hit = np.zeros((n, N_ACTIONS), bool)
+    answerable = np.zeros(n, bool)
+    qids = np.zeros(n, np.int64)
+
+    for i, q in enumerate(questions):
+        states[i] = state_vector(q.text, index, router_cfg)
+        answerable[i] = q.answerable
+        qids[i] = q.qid
+        for out in pipeline.sweep(q):
+            a = out.action
+            correct[i, a] = out.correct
+            refused[i, a] = out.refused
+            hall[i, a] = out.hallucinated
+            cost[i, a] = out.cost_tokens
+            hit[i, a] = out.hit
+    return OfflineLog(states, correct, refused, hall, cost, hit,
+                      answerable, qids)
+
+
+def build_testbed(cfg: TestbedConfig):
+    """Corpus + index + pipeline + (train_log, eval_log)."""
+    data = SyntheticSquad(
+        n_paragraphs=cfg.n_paragraphs,
+        n_questions=cfg.n_train + cfg.n_eval,
+        answerable_frac=cfg.answerable_frac,
+        seed=cfg.seed)
+    index = BM25Index.build([p.text for p in data.paragraphs], cfg.retrieval)
+    tok = HashTokenizer(32768)
+    gen = SimulatedGenerator(tok, seed=cfg.seed)
+    pipe = RAGPipeline(index, gen)
+    train_q, eval_q = data.split(cfg.n_eval)
+    train_log = generate_log(train_q, pipe, index, cfg.router)
+    eval_log = generate_log(eval_q, pipe, index, cfg.router)
+    return data, index, pipe, train_log, eval_log

@@ -1,0 +1,171 @@
+"""SLO-conditioned routing policies (paper §4.2) in JAX.
+
+The controller is a small MLP over s(q) producing a categorical
+distribution over the 5 actions.  Objectives:
+
+* ``argmax_ce``     — supervised classification of the per-state best
+                      action (paper's Argmax-CE);
+* ``argmax_ce_wt``  — CE weighted by the best-vs-second action margin
+                      (paper's Argmax-CE-WT);
+* ``soft_reward``   — reward-softmax soft targets (paper §4.2's
+                      reward-weighted variant);
+* ``constrained``   — beyond-paper mitigation for refusal collapse:
+                      Argmax-CE with a Lagrangian cap on the expected
+                      refusal probability (paper §7.1 calls for "a
+                      calibrated abstention constraint").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.actions import N_ACTIONS, REFUSE_ACTION
+from repro.core.config import RouterConfig
+from repro.core.offline_log import OfflineLog
+from repro.models.schema import ParamSpec, init_from_schema
+
+
+def policy_schema(cfg: RouterConfig):
+    dims = (cfg.state_dim,) + cfg.hidden_dims + (cfg.n_actions,)
+    schema = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        schema[f"w{i}"] = ParamSpec((a, b), ("", ""), "float32",
+                                    "normal", scale=float(np.sqrt(2.0 / a)))
+        schema[f"b{i}"] = ParamSpec((b,), ("",), "float32", "zeros")
+    return schema
+
+
+def init_policy(key, cfg: RouterConfig):
+    return init_from_schema(key, policy_schema(cfg))
+
+
+def policy_logits(params, states, cfg: RouterConfig):
+    x = states
+    n_layers = len(cfg.hidden_dims) + 1
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def policy_actions(params, states, cfg: RouterConfig) -> np.ndarray:
+    logits = policy_logits(params, jnp.asarray(states), cfg)
+    return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Objectives
+# ---------------------------------------------------------------------------
+
+
+def make_targets(rewards: np.ndarray, objective: str,
+                 margin_temp: float = 1.0):
+    """Per-example targets/weights from the (N, A) reward matrix."""
+    order = np.argsort(-rewards, axis=1)
+    best = order[:, 0]
+    second = order[:, 1]
+    n = len(rewards)
+    margin = rewards[np.arange(n), best] - rewards[np.arange(n), second]
+    if objective in ("argmax_ce", "constrained"):
+        w = np.ones(n, np.float32)
+    elif objective == "argmax_ce_wt":
+        w = (margin / (margin.mean() + 1e-8)) ** margin_temp
+        w = w.astype(np.float32)
+    elif objective == "soft_reward":
+        w = np.ones(n, np.float32)
+    else:
+        raise ValueError(objective)
+    soft = None
+    if objective == "soft_reward":
+        z = rewards / max(margin_temp, 1e-3)
+        z = z - z.max(axis=1, keepdims=True)
+        soft = (np.exp(z) / np.exp(z).sum(axis=1, keepdims=True)).astype(np.float32)
+    return best.astype(np.int64), w, soft
+
+
+@dataclass
+class TrainResult:
+    params: Dict
+    history: list
+    lagrange: float = 0.0
+
+
+def train_policy(log: OfflineLog, rewards: np.ndarray, cfg: RouterConfig,
+                 *, objective: Optional[str] = None,
+                 refusal_cap: float = 1.0,
+                 dual_lr: float = 8.0, seed: Optional[int] = None) -> TrainResult:
+    """Minibatch Adam training of the routing MLP on the offline log."""
+    objective = objective or cfg.objective
+    seed = cfg.seed if seed is None else seed
+    best, w, soft = make_targets(rewards, objective, cfg.margin_temp)
+
+    states = jnp.asarray(log.states)
+    best_j = jnp.asarray(best)
+    w_j = jnp.asarray(w)
+    soft_j = None if soft is None else jnp.asarray(soft)
+
+    params = init_policy(jax.random.PRNGKey(seed), cfg)
+    opt = {"m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params),
+           "v": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params),
+           "t": jnp.zeros((), jnp.int32)}
+
+    def loss_fn(params, sb, tb, wb, softb, lam):
+        logits = policy_logits(params, sb, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        if softb is not None:
+            ce = -jnp.sum(softb * logp, axis=-1)
+        else:
+            ce = -jnp.take_along_axis(logp, tb[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(wb * ce)
+        # weight decay
+        l2 = sum(jnp.sum(p ** 2) for k, p in params.items() if k.startswith("w"))
+        loss = loss + cfg.weight_decay * l2
+        p_refuse = jnp.mean(jnp.exp(logp[:, REFUSE_ACTION]))
+        loss = loss + lam * p_refuse
+        return loss, p_refuse
+
+    @jax.jit
+    def step(params, opt, sb, tb, wb, softb, lam):
+        (loss, p_ref), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, sb, tb, wb, softb, lam)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree_util.tree_map(lambda m_, g_: b1 * m_ + (1 - b1) * g_,
+                                   opt["m"], g)
+        v = jax.tree_util.tree_map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ ** 2,
+                                   opt["v"], g)
+        tf = t.astype(jnp.float32)
+        params = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - cfg.lr * (m_ / (1 - b1 ** tf))
+            / (jnp.sqrt(v_ / (1 - b2 ** tf)) + eps),
+            params, m, v)
+        return params, {"m": m, "v": v, "t": t}, loss, p_ref
+
+    n = log.n
+    rng = np.random.default_rng(seed)
+    lam = 0.0
+    history = []
+    for epoch in range(cfg.n_epochs):
+        perm = rng.permutation(n)
+        losses, prefs = [], []
+        for s0 in range(0, n, cfg.batch_size):
+            mb = perm[s0: s0 + cfg.batch_size]
+            sb = states[mb]
+            tb = best_j[mb]
+            wb = w_j[mb]
+            softb = None if soft_j is None else soft_j[mb]
+            params, opt, loss, p_ref = step(params, opt, sb, tb, wb, softb,
+                                            jnp.float32(lam))
+            losses.append(float(loss))
+            prefs.append(float(p_ref))
+        avg_ref = float(np.mean(prefs))
+        if objective == "constrained":
+            lam = max(0.0, lam + dual_lr * (avg_ref - refusal_cap))
+        history.append({"epoch": epoch, "loss": float(np.mean(losses)),
+                        "p_refuse": avg_ref, "lambda": lam})
+    return TrainResult(params=params, history=history, lagrange=lam)

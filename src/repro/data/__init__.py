@@ -1,0 +1,4 @@
+from repro.data.tokenizer import HashTokenizer
+from repro.data.synthetic_squad import SyntheticSquad, Paragraph, Question
+
+__all__ = ["HashTokenizer", "SyntheticSquad", "Paragraph", "Question"]

@@ -1,0 +1,4 @@
+from repro.generation.simulator import SimulatedGenerator, GenOutput
+from repro.generation.prompts import build_prompt, REFUSAL_TEXT
+
+__all__ = ["SimulatedGenerator", "GenOutput", "build_prompt", "REFUSAL_TEXT"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``bm25.py``            — blocked BM25 retrieval scoring;
+* ``flash_attention.py`` — online-softmax blocked attention (prefill);
+* ``ssd_scan.py``        — Mamba2 SSD chunk scan;
+* ``ops.py``             — jit'd public wrappers (interpret=True on CPU);
+* ``ref.py``             — pure-jnp oracles for the allclose sweeps.
+"""
+from repro.kernels.ops import bm25_scores, flash_attention, ssd_chunk_scan
+
+__all__ = ["bm25_scores", "flash_attention", "ssd_chunk_scan"]

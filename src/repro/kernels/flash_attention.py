@@ -1,0 +1,94 @@
+"""Flash attention (online-softmax blocked attention) Pallas kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with the kv axis innermost; the
+running max / denominator / accumulator live in VMEM scratch and persist
+across kv steps (TPU grid execution is sequential along the minor axis).
+Causal masking is positional, so the same kernel serves prefill and
+training.  Q/K/V tiles are MXU-aligned (block sizes multiples of 128 on
+the model dims at production shapes; the tests sweep smaller shapes in
+interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, block_q: int,
+                  block_kv: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)              # (bk, dv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False):
+    """q: (BH, Sq, D), k/v: (BH, Skv, D[v]).  Heads pre-folded into BH
+    (GQA expansion happens in ops.py)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    Dv = v.shape[2]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    n_kv = Skv // block_kv
+    grid = (BH, Sq // block_q, n_kv)
+    scale = 1.0 / (D ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_kv=block_kv, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, Dv), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dv), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom
+            pltpu.VMEM((block_q, Dv), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

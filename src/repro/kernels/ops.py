@@ -1,0 +1,84 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU containers the kernels execute in interpret mode (the kernel body
+runs as traced jnp on host); on TPU they compile to Mosaic.  Block sizes
+default to MXU-aligned tiles and shrink to fit small inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bm25 import bm25_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("k1", "b"))
+def bm25_scores(query_tf, tf, doc_len, idf, *, k1: float = 1.2,
+                b: float = 0.75):
+    """BM25 scores: (Q, V) query term-counts -> (Q, D).
+
+    Thin host-side prep + the blocked Pallas contraction.
+    """
+    avg = doc_len.mean() + 1e-6
+    norm = (k1 * (1 - b + b * doc_len / avg))[:, None].astype(jnp.float32)
+    wq = (query_tf * idf[None, :]).astype(jnp.float32)
+    Q, V = wq.shape
+    D = tf.shape[0]
+    bq = 8 if Q % 8 == 0 else 1
+    bd = 128 if D % 128 == 0 else (64 if D % 64 == 0 else D)
+    bv = 512 if V % 512 == 0 else V
+    return bm25_pallas(wq, tf.astype(jnp.float32), norm, k1=k1,
+                       block_q=bq, block_d=bd, block_v=bv,
+                       interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128):
+    """GQA flash attention: q (B, Sq, H, D), k/v (B, Skv, Hkv, D[v])."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    kx = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vx = jnp.repeat(v, G, axis=2) if G > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * H, Skv, Dv)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=_interpret())
+    return out.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunk_scan(x, B_, C_, dt, A_log, *, chunk: int = 128):
+    """Mamba2 SSD: x (B, S, H, hd), B_/C_ (B, S, G, N), dt (B, S, H).
+
+    Returns y (B, S, H, hd).  Groups are expanded to heads and heads
+    folded into the grid batch dim before the kernel.
+    """
+    Bsz, S, H, hd = x.shape
+    N = B_.shape[-1]
+    G = B_.shape[2]
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    da = (dt.astype(jnp.float32) * a).transpose(0, 2, 1)        # (B, H, S)
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    xdt = xdt.transpose(0, 2, 1, 3).reshape(Bsz * H, S, hd)
+    rep = H // G
+    Bx = jnp.repeat(B_, rep, axis=2) if rep > 1 else B_
+    Cx = jnp.repeat(C_, rep, axis=2) if rep > 1 else C_
+    Bf = Bx.transpose(0, 2, 1, 3).reshape(Bsz * H, S, N).astype(jnp.float32)
+    Cf = Cx.transpose(0, 2, 1, 3).reshape(Bsz * H, S, N).astype(jnp.float32)
+    daf = da.reshape(Bsz * H, S)
+    y = ssd_scan_pallas(xdt, Bf, Cf, daf, chunk=chunk,
+                        interpret=_interpret())
+    return y.reshape(Bsz, H, S, hd).transpose(0, 2, 1, 3).astype(x.dtype)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def bm25_ref(wq, tf, norm, k1: float = 1.2):
+    """wq: (Q, V); tf: (D, V); norm: (D, 1) -> (Q, D) float32."""
+    sat = tf * (k1 + 1.0) / (tf + norm)
+    return (wq.astype(jnp.float32) @ sat.astype(jnp.float32).T)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (BH, Sq, D); k/v: (BH, Skv, D[v])."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(xdt, B_, C_, da):
+    """Sequential SSD recurrence — the semantic ground truth.
+
+    state_s = exp(da_s) * state_{s-1} + B_s ⊗ xdt_s ;  y_s = C_s · state_s
+    (note xdt already carries dt, da = dt*a).
+    """
+    BH, S, hd = xdt.shape
+    N = B_.shape[2]
+
+    def step(state, inp):
+        x_s, b_s, c_s, da_s = inp
+        state = jnp.exp(da_s)[:, None, None] * state + \
+            jnp.einsum("bd,bn->bdn", x_s, b_s)
+        y = jnp.einsum("bn,bdn->bd", c_s, state)
+        return state, y
+
+    init = jnp.zeros((BH, hd, N), jnp.float32)
+    xs = (xdt.swapaxes(0, 1).astype(jnp.float32),
+          B_.swapaxes(0, 1).astype(jnp.float32),
+          C_.swapaxes(0, 1).astype(jnp.float32),
+          da.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(xdt.dtype)

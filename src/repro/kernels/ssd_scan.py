@@ -1,0 +1,81 @@
+"""Mamba2 SSD chunk-scan Pallas kernel.
+
+One grid step = one (sequence-chunk, batch*head) tile: the intra-chunk
+quadratic term runs as two MXU matmuls; the recurrent state
+(head_dim × d_state) lives in VMEM scratch and is carried across the
+chunk axis (innermost grid dim, sequential on TPU).  GPU implementations
+use warp-level scans for the inter-chunk recurrence; on TPU the chunk IS
+the tile and the carry is free (DESIGN.md §4).
+
+Inputs are pre-arranged by ops.py:
+    xdt (BH, S, hd)  = x * dt          (dt folded in)
+    B_  (BH, S, N), C_ (BH, S, N)      (groups pre-expanded to heads)
+    da  (BH, S)      = dt * a          (per-step log-decay, <= 0)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, b_ref, c_ref, da_ref, y_ref, state_scr,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)        # (c, hd)
+    B = b_ref[0].astype(jnp.float32)            # (c, N)
+    C = c_ref[0].astype(jnp.float32)            # (c, N)
+    da = da_ref[0].astype(jnp.float32)          # (c,)
+    cum = jnp.cumsum(da)                        # (c,)
+
+    # intra-chunk quadratic term: L[t,s] = exp(cum_t - cum_s) for s<=t
+    att = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # (c, c)
+    L = jnp.exp(cum[:, None] - cum[None, :])
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(tri, att * L, 0.0)
+    y = jnp.dot(w, xdt, preferred_element_type=jnp.float32)     # (c, hd)
+
+    # inter-chunk contribution from the carried state
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        C, state_scr[...].T, preferred_element_type=jnp.float32)
+
+    # state update: state' = e^{cum_end} * state + sum_s e^{cum_end-cum_s} B_s xdt_s^T
+    decay_to_end = jnp.exp(cum[-1] - cum)                        # (c,)
+    state_scr[...] = (jnp.exp(cum[-1]) * state_scr[...]
+                      + jnp.dot((xdt * decay_to_end[:, None]).T, B,
+                                preferred_element_type=jnp.float32))
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(xdt, B_, C_, da, *, chunk: int = 128,
+                    interpret: bool = False):
+    """xdt: (BH, S, hd); B_/C_: (BH, S, N); da: (BH, S) -> y (BH, S, hd)."""
+    BH, S, hd = xdt.shape
+    N = B_.shape[2]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda b, ci: (b, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(xdt, B_, C_, da)

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this builds ShapeDtypeStruct stand-ins (weights,
+optimizer state, batch, KV caches — no allocation), jits the right step
+function (train_step / prefill / serve_step), lowers, compiles, and
+records:
+
+* ``compiled.memory_analysis()`` — proves the per-device footprint fits;
+* ``compiled.cost_analysis()``   — FLOPs / bytes for §Roofline;
+* collective bytes parsed from the HLO — the third roofline term.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --mesh single            # one combination
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.moe_parallel import make_ep_moe_fn
+from repro.launch.specs import (batch_specs, cache_specs, opt_specs,
+                                param_specs, use_ep)
+from repro.models.registry import build_model
+from repro.training.optimizer import OptConfig
+from repro.training.steps import make_train_step
+from repro import sharding as shlib
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-buffer sizes of collective ops in (optimized) HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(.*?)\s+(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        op = m.group(2)
+        total = 0
+        for dt, dims in shape_re.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] += total
+        counts[op] += 1
+    return out, counts
+
+
+def pick_microbatches(cfg, B, S, n_batch_shards, budget=1 << 30):
+    """Grad-accum factor keeping the scanned activation carry bounded.
+
+    Budget is deliberately conservative (~1 GiB of carried activations):
+    the backward live-set of one rematerialized block is ~4x the carry.
+    """
+    per_dev_tokens = (B // max(n_batch_shards, 1)) * S
+    est = cfg.n_layers * per_dev_tokens * cfg.d_model * 2 * 2  # x + slack
+    n_mb = 1
+    while est / n_mb > budget and (B // max(n_batch_shards, 1)) % (n_mb * 2) == 0:
+        n_mb *= 2
+    return n_mb
+
+
+def build_step(arch: str, shape_name: str, mesh, *, mla_absorb=False,
+               capacity_factor=1.25, microbatches=None, pad_heads=0,
+               moe_comm_bf16=False, moe_scatter_down=False, q_chunk=0,
+               window_ring=False, embed_one_hot=False):
+    """Returns (jitted_fn, example_args) for one (arch, shape)."""
+    import dataclasses
+    import jax.numpy as _jnp
+    cfg = get_config(arch, "full")
+    if q_chunk:
+        cfg = dataclasses.replace(cfg, attn_q_chunk=q_chunk)
+    if window_ring:
+        cfg = dataclasses.replace(cfg, window_ring_cache=True)
+    if embed_one_hot:
+        cfg = dataclasses.replace(cfg, embed_one_hot=True)
+    if pad_heads:
+        # §Perf: pad head counts up to a TP-divisible multiple (zero-init
+        # extra heads are exact; here it is a structural variant) instead
+        # of falling back to head_dim sharding.
+        up = lambda h: ((h + pad_heads - 1) // pad_heads) * pad_heads if h else h
+        cfg = dataclasses.replace(cfg, n_heads=up(cfg.n_heads),
+                                  n_kv_heads=up(cfg.n_kv_heads))
+    model = build_model(cfg)
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    B = INPUT_SHAPES[shape_name]["global_batch"]
+    S = INPUT_SHAPES[shape_name]["seq_len"]
+    ep = use_ep(cfg, mesh)
+    moe_fn = make_ep_moe_fn(
+        mesh, capacity_factor,
+        comm_dtype=_jnp.bfloat16 if moe_comm_bf16 else None,
+        scatter_down=moe_scatter_down) if ep else None
+
+    pspecs = param_specs(cfg, mesh, ep=ep)
+
+    if kind == "train":
+        sizes = shlib.mesh_axis_sizes(mesh)
+        nb = sizes.get("data", 1) * sizes.get("pod", 1)
+        n_mb = microbatches or pick_microbatches(cfg, B, S, nb)
+        step = make_train_step(model, OptConfig(), moe_fn=moe_fn,
+                               microbatches=n_mb)
+        ospecs = opt_specs(cfg, mesh, ep=ep)
+        bspecs = batch_specs(cfg, shape_name, mesh)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (pspecs, ospecs, bspecs), {"microbatches": n_mb, "ep": ep}
+
+    if kind == "prefill":
+        bspecs = batch_specs(cfg, shape_name, mesh)
+        cspecs = cache_specs(cfg, shape_name, mesh)
+
+        def prefill(params, inputs, cache):
+            return model.prefill(params, inputs, cache, moe_fn=moe_fn,
+                                 mla_absorb=mla_absorb)
+
+        fn = jax.jit(prefill, donate_argnums=(2,))
+        return fn, (pspecs, bspecs, cspecs), {"ep": ep}
+
+    # decode
+    bspecs = batch_specs(cfg, shape_name, mesh)
+    cspecs = cache_specs(cfg, shape_name, mesh)
+
+    def serve_step(params, tokens, cache):
+        logits, new_cache = model.decode(params, {"tokens": tokens}, cache,
+                                         moe_fn=moe_fn, mla_absorb=mla_absorb)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    fn = jax.jit(serve_step, donate_argnums=(2,))
+    return fn, (pspecs, bspecs["tokens"], cspecs), {"ep": ep}
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, **kw):
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    t0 = time.time()
+    shlib.FALLBACK_LOG.clear()
+    fn, args, info = build_step(arch, shape_name, mesh, **kw)
+    info.update({k: v for k, v in kw.items() if v})
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll, coll_counts = collective_bytes(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_devices": int(n_dev),
+        "info": info,
+        "fallbacks": list(dict.fromkeys(shlib.FALLBACK_LOG)),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1)) if cost else -1.0,
+        "collective_bytes": coll,
+        "collective_counts": coll_counts,
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad head counts to a multiple (e.g. 16)")
+    ap.add_argument("--moe-comm-bf16", action="store_true")
+    ap.add_argument("--moe-scatter-down", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--window-ring", action="store_true")
+    ap.add_argument("--embed-one-hot", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not shape_supported(arch, shape):
+                print(f"SKIP  {arch} × {shape} (documented in DESIGN.md)")
+                continue
+            for mk in meshes:
+                name = f"{arch}__{shape}__{mk}{args.tag}"
+                try:
+                    rec = run_one(arch, shape, mk,
+                                  mla_absorb=args.mla_absorb,
+                                  capacity_factor=args.capacity_factor,
+                                  microbatches=args.microbatches,
+                                  pad_heads=args.pad_heads,
+                                  moe_comm_bf16=args.moe_comm_bf16,
+                                  moe_scatter_down=args.moe_scatter_down,
+                                  q_chunk=args.q_chunk,
+                                  window_ring=args.window_ring,
+                                  embed_one_hot=args.embed_one_hot)
+                    (RESULTS_DIR / f"{name}.json").write_text(
+                        json.dumps(rec, indent=1))
+                    per_dev = rec.get("temp_size_in_bytes", 0) / 2**30
+                    print(f"OK    {name}: compile={rec['compile_s']}s "
+                          f"flops={rec['flops']:.3g} temp={per_dev:.2f}GiB "
+                          f"coll={sum(rec['collective_bytes'].values()):.3g}B")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((name, repr(e)[:400]))
+                    print(f"FAIL  {name}: {repr(e)[:400]}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

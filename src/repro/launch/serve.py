@@ -1,0 +1,56 @@
+"""Serving driver: the full SLO-routed RAG service loop.
+
+Builds the paper testbed (corpus, BM25 index, simulator backend), loads
+or trains a routing policy, then serves a batch of queries end-to-end:
+route -> retrieve -> generate -> report per-SLO metrics.
+
+    PYTHONPATH=src python -m repro.launch.serve --slo quality_first -n 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.actions import ACTIONS, SLO_PROFILES
+from repro.core.config import TestbedConfig
+from repro.core.experiment import run_experiment
+from repro.core.metrics import evaluate_actions
+from repro.core.offline_log import build_testbed
+from repro.core.policy import policy_actions, train_policy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slo", default="quality_first",
+                    choices=list(SLO_PROFILES))
+    ap.add_argument("--objective", default="argmax_ce")
+    ap.add_argument("-n", type=int, default=50)
+    ap.add_argument("--refusal-cap", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = TestbedConfig()
+    profile = SLO_PROFILES[args.slo]
+    data, index, pipe, train_log, eval_log = build_testbed(cfg)
+    tr = train_policy(train_log, train_log.rewards(profile), cfg.router,
+                      objective=args.objective, refusal_cap=args.refusal_cap)
+
+    # serve the first n eval queries
+    eval_q = data.questions[-cfg.n_eval:][: args.n]
+    acts = policy_actions(tr.params, eval_log.states[: args.n], cfg.router)
+    print(f"# serving {args.n} queries under SLO={args.slo} "
+          f"objective={args.objective}")
+    for q, a in zip(eval_q[:10], acts[:10]):
+        action = ACTIONS[a]
+        out = pipe.execute(q, action)
+        print(f"q={q.text[:48]:50s} -> a{a} (k={action.k},{action.mode:7s}) "
+              f"cost={out.cost_tokens:6.0f} "
+              f"{'REFUSED' if out.refused else ('OK' if out.correct else 'WRONG')}")
+    rep = evaluate_actions(eval_log.subset(np.arange(args.n)), acts, profile,
+                           args.objective)
+    print(json.dumps(rep.row(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

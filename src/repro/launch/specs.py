@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input-shape) pair.
+
+Nothing here allocates device memory: weights, caches and batches are
+ShapeDtypeStructs with NamedShardings attached, ready for
+``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.core.config import ModelConfig
+from repro.models.schema import schema_shapes
+from repro.models.transformer import decoder_param_schema, init_cache_schema
+from repro.sharding import input_sharding, shardings_for_schema
+from repro.training.optimizer import adamw_init_schema
+
+
+def _sds(shape, dtype, mesh, batch):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.dtype(dtype),
+        sharding=input_sharding(mesh, batch, len(shape)))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh) -> Dict[str, Any]:
+    """Train/prefill batch ShapeDtypeStructs (tokens, labels, modality)."""
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+
+    specs: Dict[str, Any] = {}
+    if kind == "decode":
+        specs["tokens"] = _sds((B, 1), "int32", mesh, B)
+        return specs
+
+    s_txt = S - cfg.n_modality_tokens if cfg.modality == "vision" else S
+    specs["tokens"] = _sds((B, s_txt), "int32", mesh, B)
+    if kind == "train":
+        specs["labels"] = _sds((B, s_txt), "int32", mesh, B)
+    if cfg.modality == "vision":
+        specs["image_emb"] = _sds((B, cfg.n_modality_tokens,
+                                   cfg.modality_embed_dim), cfg.dtype, mesh, B)
+    if cfg.modality == "audio":
+        specs["audio_emb"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                  cfg.dtype, mesh, B)
+    return specs
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, *, ep: bool = False):
+    schema = decoder_param_schema(cfg)
+    shapes = schema_shapes(schema)
+    shards = shardings_for_schema(schema, mesh, fsdp=True, ep=ep)
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shards)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, *, ep: bool = False):
+    schema = adamw_init_schema(decoder_param_schema(cfg))
+    shapes = schema_shapes(schema)
+    shards = shardings_for_schema(schema, mesh, fsdp=True, ep=ep)
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shards)
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh):
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    schema = init_cache_schema(cfg, B, S)
+    shapes = schema_shapes(schema)
+    shards = shardings_for_schema(schema, mesh, fsdp=False)
+    return jax.tree_util.tree_map(
+        lambda s, sh_: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh_),
+        shapes, shards)
+
+
+def use_ep(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Expert parallelism: only when experts divide the data axis."""
+    if cfg.moe is None:
+        return False
+    from repro.sharding import mesh_axis_sizes
+    return cfg.moe.n_experts % mesh_axis_sizes(mesh)["data"] == 0

@@ -1,0 +1,30 @@
+"""Model zoo: dense GQA / MLA / MoE / SSM / hybrid / enc-dec / multimodal.
+
+All models are pure-function JAX: ``param_schema(cfg)`` describes every
+weight (shape + logical axes), ``init_params(key, cfg)`` materializes
+them, and ``forward_*`` functions run train / prefill / decode paths.
+"""
+
+from repro.models.schema import ParamSpec, init_from_schema, schema_shapes
+from repro.models.transformer import (
+    decoder_param_schema,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_cache_schema,
+    loss_fn,
+)
+from repro.models.registry import build_model
+
+__all__ = [
+    "ParamSpec",
+    "init_from_schema",
+    "schema_shapes",
+    "decoder_param_schema",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_cache_schema",
+    "loss_fn",
+    "build_model",
+]

@@ -1,0 +1,370 @@
+"""Core layer primitives: norms, rope, chunked attention, MLP, MLA.
+
+Everything is a pure function over explicit parameter pytrees.  Attention
+is implemented with query-chunking (lax.scan over query blocks) so that a
+(S x S) score tensor never materializes at 32k+ sequence lengths — this
+is the jnp reference semantics for the Pallas flash kernel and also what
+the dry-run lowers through XLA.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MLAConfig, ModelConfig
+from repro.models.schema import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_schema(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("d_model",), init="ones")
+
+
+def rmsnorm(w, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(head_dim: int, theta: float, positions):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    cos, sin = rope_angles(d, theta, positions)
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        cos, sin = cos[None], sin[None]
+    cos = cos[..., None, :]  # (B, S, 1, half)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked, GQA)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(q, k, v, q_pos, kv_pos, kv_len, *, causal, window, softcap):
+    """One query block against full kv.
+
+    q: (B, Sq, Hkv, G, Dh)  k/v: (B, Skv, Hkv, Dh)
+    q_pos: (B, Sq)  kv_pos: (Skv,)  kv_len: (B,) or None
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = jnp.ones(scores.shape[-2:], dtype=bool)[None]  # (1, Sq, Skv)
+    qp = q_pos[:, :, None]          # (B, Sq, 1)
+    kp = kv_pos[None, None, :]      # (1, 1, Skv)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (kp > qp - window)
+    if kv_len is not None:
+        mask = mask & (kp < kv_len[:, None, None])
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def attention(q, k, v, *, q_pos, kv_len=None, causal=True, window=0,
+              softcap=0.0, q_chunk=1024):
+    """Grouped-query attention with query chunking.
+
+    q: (B, Sq, H, Dh), k/v: (B, Skv, Hkv, Dh).
+    q_pos: (B, Sq) absolute positions of queries.
+    kv_len: (B,) valid cache length (None = all Skv valid).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    kv_pos = jnp.arange(Skv, dtype=jnp.int32)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        out = _attn_block(qg, k, v, q_pos, kv_pos, kv_len,
+                          causal=causal, window=window, softcap=softcap)
+        return out.reshape(B, Sq, H, Dv)
+
+    n = Sq // q_chunk
+    qs = qg.reshape(B, n, q_chunk, Hkv, G, Dh).swapaxes(0, 1)
+    ps = q_pos.reshape(B, n, q_chunk).swapaxes(0, 1)
+
+    def body(_, qc_pc):
+        qc, pc = qc_pc
+        o = _attn_block(qc, k, v, pc, kv_pos, kv_len,
+                        causal=causal, window=window, softcap=softcap)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    out = outs.swapaxes(0, 1).reshape(B, Sq, Hkv, G, Dv)
+    return out.reshape(B, Sq, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def gqa_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, H, Dh), ("d_model", "heads", "head_dim")),
+        "wk": ParamSpec((d, Hkv, Dh), ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, Hkv, Dh), ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, Dh, d), ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H, Dh), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((Hkv, Dh), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((Hkv, Dh), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
+              causal=True, cross_kv=None, ring=False):
+    """x: (B, S, d). cache: {"k","v"} or None.  positions: (B, S).
+
+    The valid cache length is derived from positions: after inserting
+    this step's kv, entries [0, positions[:, -1] + 1) are valid.
+    Returns (out, new_cache).  With ``cross_kv=(k_src, v_src)`` this is
+    cross-attention (no rope on kv side, no causal mask).
+
+    ``ring=True`` (requires ``window > 0``): the cache is a ring buffer
+    of size ``window``; slot = position % window.  Keys carry their
+    absolute-position rope phases, so relative attention is exact; all
+    resident entries are within the window by construction, hence the
+    score mask reduces to "slot filled".
+    """
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = attention(q, k, v, q_pos=positions, causal=False)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if (cfg.use_pallas_attention and causal and not window
+                and not cfg.attn_logit_softcap and q.shape[1] == k.shape[1]
+                and q.shape[1] % 128 == 0):
+            from repro.kernels.ops import flash_attention as _flash
+            out = _flash(q, k, v, causal=True)
+        else:
+            out = attention(q, k, v, q_pos=positions, causal=causal,
+                            window=window, softcap=cfg.attn_logit_softcap,
+                            q_chunk=cfg.attn_q_chunk)
+        new_cache = None
+    elif ring and window:
+        ck, cv = cache["k"], cache["v"]           # (B, window, Hkv, Dh)
+        bidx = jnp.arange(B)
+        W = ck.shape[1]
+        if S == 1:
+            slot = positions[:, 0] % W
+            ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+            # every resident entry is within the window and ≤ the query
+            # position; only mask unfilled slots during warm-up (pos < W)
+            kv_len = jnp.minimum(positions[:, -1] + 1, W)
+            out = attention(q, ck, cv, q_pos=positions, kv_len=kv_len,
+                            causal=False, window=0,
+                            softcap=cfg.attn_logit_softcap,
+                            q_chunk=cfg.attn_q_chunk)
+        else:
+            # prefill: attend over the fresh k/v (exact windowed-causal),
+            # the ring only receives the trailing window of keys
+            out = attention(q, k, v, q_pos=positions, causal=causal,
+                            window=window, softcap=cfg.attn_logit_softcap,
+                            q_chunk=cfg.attn_q_chunk)
+            span = min(S, W)
+            slots = positions[:, -span:] % W       # (B, span)
+            ck = ck.at[bidx[:, None], slots].set(k[:, -span:].astype(ck.dtype))
+            cv = cv.at[bidx[:, None], slots].set(v[:, -span:].astype(cv.dtype))
+        new_cache = {"k": ck, "v": cv}
+    else:
+        ck, cv = cache["k"], cache["v"]
+        bidx = jnp.arange(B)
+        if S == 1:  # decode: scatter at per-request positions
+            ck = ck.at[bidx, positions[:, 0]].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, positions[:, 0]].set(v[:, 0].astype(cv.dtype))
+        else:  # prefill into an empty cache (positions 0..S-1)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        kv_len = positions[:, -1] + 1
+        out = attention(q, ck, cv, q_pos=positions, kv_len=kv_len,
+                        causal=causal, window=window,
+                        softcap=cfg.attn_logit_softcap,
+                        q_chunk=cfg.attn_q_chunk)
+        new_cache = {"k": ck, "v": cv}
+
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — DeepSeek-V2/V3, MiniCPM3
+# ---------------------------------------------------------------------------
+
+
+def mla_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.n_heads
+    m: MLAConfig = cfg.mla
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    s = {}
+    if m.q_lora_rank:
+        s["wq_a"] = ParamSpec((d, m.q_lora_rank), ("d_model", ""))
+        s["q_norm"] = ParamSpec((m.q_lora_rank,), ("",), init="ones")
+        s["wq_b"] = ParamSpec((m.q_lora_rank, H, qd), ("", "heads", "head_dim"))
+    else:
+        s["wq_b"] = ParamSpec((d, H, qd), ("d_model", "heads", "head_dim"))
+    s["wkv_a"] = ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim), ("d_model", ""))
+    s["kv_norm"] = ParamSpec((m.kv_lora_rank,), ("",), init="ones")
+    s["wk_b"] = ParamSpec((m.kv_lora_rank, H, m.qk_nope_head_dim),
+                          ("", "heads", "head_dim"))
+    s["wv_b"] = ParamSpec((m.kv_lora_rank, H, m.v_head_dim),
+                          ("", "heads", "head_dim"))
+    s["wo"] = ParamSpec((H, m.v_head_dim, d), ("heads", "head_dim", "d_model"))
+    return s
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, causal=True,
+              absorb: bool = False):
+    """MLA forward.  Cache stores the *compressed* (c_kv, k_rope) pair.
+
+    ``absorb=True`` uses the weight-absorption decode trick (attention in
+    latent space) — a beyond-paper §Perf optimization; ``False`` is the
+    naive expansion (baseline).
+    """
+    B, S, d = x.shape
+    m: MLAConfig = cfg.mla
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    # --- queries
+    if m.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed kv
+    ckv_full = x @ p["wkv_a"]
+    c_kv = rmsnorm(p["kv_norm"], ckv_full[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank:]  # (B, S, dr) shared across heads
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        bidx = jnp.arange(B)
+        if S == 1:
+            pos0 = positions[:, 0]
+            cc = cache["c_kv"].at[bidx, pos0].set(c_kv[:, 0].astype(cache["c_kv"].dtype))
+            cr = cache["k_rope"].at[bidx, pos0].set(k_rope[:, 0].astype(cache["k_rope"].dtype))
+        else:
+            cc = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        kv_src, kr_src, kv_len = cc, cr, positions[:, -1] + 1
+    else:
+        new_cache = None
+        kv_src, kr_src, kv_len = c_kv, k_rope, None
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    Skv = kv_src.shape[1]
+    kv_pos = jnp.arange(Skv, dtype=jnp.int32)
+
+    if absorb:
+        # latent-space attention: fold wk_b into q, wv_b into the output.
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                           p["wk_b"].astype(jnp.float32))
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, kv_src.astype(jnp.float32))
+                  + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                               kr_src.astype(jnp.float32))) * scale
+        mask = jnp.ones((S, Skv), bool)[None]
+        if causal:
+            mask = mask & (kv_pos[None, None, :] <= positions[:, :, None])
+        if kv_len is not None:
+            mask = mask & (kv_pos[None, None, :] < kv_len[:, None, None])
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, kv_src.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, p["wv_b"].astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        # naive: expand the latent into per-head k/v, then plain MHA.
+        k_nope = jnp.einsum("btr,rhk->bthk", kv_src, p["wk_b"])
+        v = jnp.einsum("btr,rhv->bthv", kv_src, p["wv_b"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_src[:, :, None, :],
+                                      (B, Skv, H, dr)).astype(k_nope.dtype)],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(qq, k, v, q_pos=positions, kv_len=kv_len, causal=causal)
+
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "w_gate": ParamSpec((d, f), ("d_model", "d_ff")),
+        "w_up": ParamSpec((d, f), ("d_model", "d_ff")),
+        "w_down": ParamSpec((f, d), ("d_ff", "d_model")),
+    }
+    if cfg.use_bias:
+        s["b_ff"] = ParamSpec((f,), ("d_ff",), init="zeros")
+        s["b_out"] = ParamSpec((d,), ("d_model",), init="zeros")
+    return s
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    if "b_ff" in p:
+        h = h + p["b_ff"]
+    out = h @ p["w_down"]
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out

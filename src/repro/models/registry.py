@@ -1,0 +1,49 @@
+"""Model façade: bundle schema + forward fns for a ModelConfig."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.core.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.schema import init_from_schema, schema_shapes, n_params
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    schema: Dict[str, Any]
+
+    def init(self, key) -> Dict[str, Any]:
+        return init_from_schema(key, self.schema)
+
+    def param_shapes(self):
+        return schema_shapes(self.schema)
+
+    def n_params(self) -> int:
+        return n_params(self.schema)
+
+    def cache_schema(self, batch: int, max_len: int):
+        return T.init_cache_schema(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int):
+        return init_from_schema(jax.random.PRNGKey(0),
+                                self.cache_schema(batch, max_len))
+
+    # forward passes --------------------------------------------------
+    def train_logits(self, params, inputs, *, moe_fn: Optional[Callable] = None):
+        return T.forward_train(params, self.cfg, inputs, moe_fn=moe_fn)
+
+    def prefill(self, params, inputs, cache, *, moe_fn=None, mla_absorb=False):
+        return T.forward_prefill(params, self.cfg, inputs, cache,
+                                 moe_fn=moe_fn, mla_absorb=mla_absorb)
+
+    def decode(self, params, inputs, cache, *, moe_fn=None, mla_absorb=False):
+        return T.forward_decode(params, self.cfg, inputs, cache,
+                                moe_fn=moe_fn, mla_absorb=mla_absorb)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, schema=T.decoder_param_schema(cfg))

@@ -1,0 +1,82 @@
+"""Parameter schema: declarative weight descriptors.
+
+A model is described as a pytree of :class:`ParamSpec` leaves.  The same
+tree drives three consumers:
+
+* ``init_from_schema(key, schema)`` — materialize parameters;
+* ``schema_shapes(schema)`` — ShapeDtypeStructs for ``jax.eval_shape`` /
+  dry-run lowering (no allocation);
+* ``repro.sharding.specs_for_schema`` — PartitionSpecs resolved from the
+  *logical axes* recorded on each leaf (with divisibility fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    # logical axis names, one per dim: "vocab" | "d_model" | "d_ff" |
+    # "heads" | "kv_heads" | "head_dim" | "experts" | "layers" |
+    # "d_inner" | "d_state" | null ""
+    axes: Tuple[str, ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"            # normal | zeros | ones | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(key, spec: ParamSpec):
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = spec.scale
+    if spec.init == "small":
+        scale = spec.scale * 0.1
+    # fan-in scaled normal
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_from_schema(key, schema):
+    """Materialize a parameter pytree from a ParamSpec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def schema_shapes(schema):
+    """ShapeDtypeStruct tree — for .lower() without allocating."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        schema,
+        is_leaf=_is_spec,
+    )
+
+
+def n_params(schema) -> int:
+    leaves = jax.tree_util.tree_leaves(schema, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Add a leading stacked dim (for lax.scan over layers)."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.dtype, s.init, s.scale),
+        spec_tree,
+        is_leaf=_is_spec,
+    )

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality) layer.
+
+Chunked SSD algorithm [arXiv:2405.21060]: the sequence is split into
+chunks; within a chunk the quadratic (attention-like) form runs on the
+MXU, across chunks a recurrent state (B, H, head_dim, d_state) is carried
+by a scan.  Decode is a single-token state update — O(1) in sequence
+length, which is what makes ``long_500k`` feasible for SSM/hybrid archs.
+
+GPU implementations lean on warp-level scans; here the chunk is the VMEM
+tile and the inter-chunk recurrence is a ``lax.scan`` — see
+``repro.kernels.ssd_chunk_scan`` for the Pallas version of the
+intra-chunk term.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, SSMConfig
+from repro.models.schema import ParamSpec
+from repro.models.layers import rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads
+
+
+def ssm_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    s: SSMConfig = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    return {
+        "w_z": ParamSpec((d, d_inner), ("d_model", "d_inner")),
+        "w_x": ParamSpec((d, d_inner), ("d_model", "d_inner")),
+        "w_B": ParamSpec((d, gn), ("d_model", "")),
+        "w_C": ParamSpec((d, gn), ("d_model", "")),
+        "w_dt": ParamSpec((d, H), ("d_model", "")),
+        "dt_bias": ParamSpec((H,), ("",), init="zeros"),
+        "A_log": ParamSpec((H,), ("",), init="zeros"),
+        "D": ParamSpec((H,), ("",), init="ones"),
+        "conv_x": ParamSpec((s.d_conv, d_inner), ("", "d_inner"), init="small"),
+        "conv_B": ParamSpec((s.d_conv, gn), ("", ""), init="small"),
+        "conv_C": ParamSpec((s.d_conv, gn), ("", ""), init="small"),
+        "norm": ParamSpec((d_inner,), ("d_inner",), init="ones"),
+        "w_out": ParamSpec((d_inner, d), ("d_inner", "d_model")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C).
+
+    With ``state`` (B, K-1, C) the conv consumes it as left context and
+    the updated state is returned (decode path).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _expand_groups(t, H):
+    """(B, ..., G, N) -> (B, ..., H, N) by repeating groups."""
+    G = t.shape[-2]
+    return jnp.repeat(t, H // G, axis=-2) if G != H else t
+
+
+def ssd_chunked(x, Bm, Cm, dt, A_log, c: int):
+    """SSD chunked scan (reference jnp path).
+
+    x:  (B, S, H, hd)   Bm/Cm: (B, S, G, N)   dt: (B, S, H)
+    Returns y (B, S, H, hd) and final state (B, H, hd, N).
+    """
+    Bsz, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    assert S % c == 0, (S, c)
+    nc = S // c
+    a = -jnp.exp(A_log.astype(jnp.float32))            # (H,)
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, c, H, hd)
+    Bc = _expand_groups(Bm.astype(jnp.float32), H).reshape(Bsz, nc, c, H, N)
+    Cc = _expand_groups(Cm.astype(jnp.float32), H).reshape(Bsz, nc, c, H, N)
+    dtc = dt.astype(jnp.float32).reshape(Bsz, nc, c, H)
+
+    da = dtc * a                                       # (B, nc, c, H) ≤ 0
+    cum = jnp.cumsum(da, axis=2)
+
+    # intra-chunk quadratic term
+    att = jnp.einsum("bzthn,bzshn->bztsh", Cc, Bc)     # (B, nc, c, c, H)
+    L = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, None, :, :, None]
+    w = jnp.where(tri, att * L, 0.0) * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bztsh,bzshd->bzthd", w, xf)
+
+    # chunk summaries -> inter-chunk recurrence
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (B, nc, c, H)
+    S_chunk = jnp.einsum("bzsh,bzshn,bzshd->bzhdn",
+                         dtc * decay_to_end, Bc, xf)   # (B, nc, H, hd, N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B, nc, H)
+
+    def step(state, inp):
+        s_c, dec = inp
+        prev = state
+        state = state * dec[:, :, None, None] + s_c
+        return state, prev
+
+    init = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+    final, prevs = jax.lax.scan(
+        step, init,
+        (S_chunk.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    states_prev = prevs.swapaxes(0, 1)                 # (B, nc, H, hd, N)
+
+    y_inter = jnp.einsum("bzthn,bzhdn,bzth->bzthd",
+                         Cc, states_prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, hd)
+    return y.astype(x.dtype), final
+
+
+def ssm_apply(p, x, cfg: ModelConfig, *, cache=None) -> Tuple[jax.Array, dict]:
+    """Mamba2 block.  x: (B, S, d).
+
+    cache (decode): {"state": (B,H,hd,N) f32, "conv_x": (B,K-1,d_inner),
+    "conv_B": (B,K-1,GN), "conv_C": (B,K-1,GN)}.
+    """
+    B, S, d = x.shape
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    hd, N, G = s.head_dim, s.d_state, s.n_groups
+
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt = jax.nn.softplus(x @ p["w_dt"] + p["dt_bias"])  # (B, S, H)
+
+    if cache is None or S > 1:
+        # train (no cache) or prefill (fill conv + ssm state from scratch)
+        xs, cx = _causal_conv(xs, p["conv_x"])
+        Bm, cb = _causal_conv(Bm, p["conv_B"])
+        Cm, cc = _causal_conv(Cm, p["conv_C"])
+        xh = xs.reshape(B, S, H, hd)
+        c = min(s.chunk_size, S)
+        while S % c != 0:
+            c -= 1
+        if cfg.use_pallas_ssd and cache is None and S % 128 == 0:
+            from repro.kernels.ops import ssd_chunk_scan as _ssd
+            y = _ssd(xh, Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N),
+                     dt, p["A_log"], chunk=c)
+            final = None  # train path: no state carry needed
+        else:
+            y, final = ssd_chunked(xh, Bm.reshape(B, S, G, N),
+                                   Cm.reshape(B, S, G, N), dt,
+                                   p["A_log"], c)
+        if cache is None:
+            new_cache = None
+        else:
+            new_cache = {"state": final, "conv_x": cx, "conv_B": cb,
+                         "conv_C": cc}
+    else:
+        xs, cx = _causal_conv(xs, p["conv_x"], cache["conv_x"])
+        Bm, cb = _causal_conv(Bm, p["conv_B"], cache["conv_B"])
+        Cm, cc = _causal_conv(Cm, p["conv_C"], cache["conv_C"])
+        xh = xs.reshape(B, H, hd).astype(jnp.float32)
+        Bt = _expand_groups(Bm.reshape(B, G, N).astype(jnp.float32), H)
+        Ct = _expand_groups(Cm.reshape(B, G, N).astype(jnp.float32), H)
+        dtt = dt.reshape(B, H).astype(jnp.float32)
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        decay = jnp.exp(dtt * a)                        # (B, H)
+        state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+            "bhn,bhd,bh->bhdn", Bt, xh, dtt)
+        y = jnp.einsum("bhn,bhdn->bhd", Ct, state)[:, None].astype(x.dtype)
+        new_cache = {"state": state, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+        y = y.reshape(B, S, H, hd)
+
+    y = y + p["D"].astype(y.dtype)[:, None] * xs.reshape(B, S, H, hd)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"], new_cache
+
+
+def ssm_cache_schema(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    K = s.d_conv
+    return {
+        "state": ParamSpec((batch, H, s.head_dim, s.d_state),
+                           ("batch", "", "", ""), "float32", "zeros"),
+        "conv_x": ParamSpec((batch, K - 1, d_inner),
+                            ("batch", "", "d_inner"), cfg.dtype, "zeros"),
+        "conv_B": ParamSpec((batch, K - 1, gn), ("batch", "", ""), cfg.dtype, "zeros"),
+        "conv_C": ParamSpec((batch, K - 1, gn), ("batch", "", ""), cfg.dtype, "zeros"),
+    }

@@ -1,0 +1,539 @@
+"""Transformer assembly: decoder-only / enc-dec / hybrid / MoE / VLM.
+
+Layers are grouped into *periodic blocks*: an optional unrolled prefix
+(e.g. DeepSeek-V3's first-3-dense layers) followed by ``n_blocks``
+repeats of a heterogeneous block of ``P`` layers (Jamba: 7 Mamba + 1
+attention per 8; Gemma3: 5 local + 1 global per 6).  The repeats are
+executed with ``lax.scan`` over stacked parameters so HLO size and
+compile time stay bounded at 40–72 layers.
+
+Caches for decode are pytrees mirroring the block structure; the decode
+scan threads per-block cache slices through ``xs``/``ys``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models.schema import ParamSpec, stack_specs
+from repro.models import layers as L
+from repro.models.moe import moe_schema, moe_apply_ragged
+from repro.models.ssm import ssm_schema, ssm_apply, ssm_cache_schema
+
+
+# ---------------------------------------------------------------------------
+# Layer signatures & block structure
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSig:
+    kind: str          # "A" | "M"
+    window: int        # 0 = full attention
+    is_moe: bool
+    cross: bool        # enc-dec decoder cross-attention sublayer
+    causal: bool = True
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def layer_structure(cfg: ModelConfig) -> Tuple[List[LayerSig], List[LayerSig], int]:
+    """Returns (prefix_sigs, block_sigs, n_blocks)."""
+    def sig(i: int) -> LayerSig:
+        kind = cfg.layer_kind(i)
+        window = 0
+        if kind == "A" and cfg.sliding_window and cfg.attn_kind(i) == "L":
+            window = cfg.sliding_window
+        return LayerSig(kind, window, cfg.is_moe_layer(i),
+                        cfg.is_encoder_decoder)
+
+    prefix_n = cfg.moe.first_k_dense if cfg.moe else 0
+    P = _lcm(_lcm(len(cfg.layer_pattern) or 1, len(cfg.attn_pattern) or 1),
+             cfg.moe.moe_period if cfg.moe else 1)
+    rest = cfg.n_layers - prefix_n
+    assert rest % P == 0, f"{cfg.name}: {rest} layers not divisible by period {P}"
+    prefix = [sig(i) for i in range(prefix_n)]
+    block = [sig(prefix_n + j) for j in range(P)]
+    # verify periodicity
+    for b in range(rest // P):
+        for j in range(P):
+            assert sig(prefix_n + b * P + j) == block[j], (cfg.name, b, j)
+    return prefix, block, rest // P
+
+
+def _layer_schema(cfg: ModelConfig, s: LayerSig) -> Dict[str, Any]:
+    d = cfg.d_model
+    out: Dict[str, Any] = {"ln1": L.rmsnorm_schema(d)}
+    if s.kind == "M":
+        out["ssm"] = ssm_schema(cfg)
+    elif cfg.attn_type == "mla":
+        out["attn"] = L.mla_schema(cfg)
+    else:
+        out["attn"] = L.gqa_schema(cfg)
+    if s.cross and s.kind == "A":
+        out["ln_cross"] = L.rmsnorm_schema(d)
+        out["cross"] = L.gqa_schema(cfg)
+    out["ln2"] = L.rmsnorm_schema(d)
+    if s.is_moe:
+        out["moe"] = moe_schema(cfg)
+    elif s.kind == "A" or cfg.d_ff:
+        out["mlp"] = L.mlp_schema(cfg)
+    return out
+
+
+def apply_layer(p, x, cfg: ModelConfig, s: LayerSig, *, positions,
+                cache=None, enc_out=None, moe_fn=None, mla_absorb=False):
+    """One residual block.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if s.kind == "M":
+        sub = {k: cache[k] for k in ("state", "conv_x", "conv_B", "conv_C")} \
+            if cache is not None else None
+        out, nc = ssm_apply(p["ssm"], h, cfg, cache=sub)
+        if nc is not None:
+            new_cache.update(nc)
+    elif cfg.attn_type == "mla":
+        sub = {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]} \
+            if cache is not None else None
+        out, nc = L.mla_apply(p["attn"], h, cfg, positions=positions,
+                              cache=sub, absorb=mla_absorb)
+        if nc is not None:
+            new_cache.update(nc)
+    else:
+        sub = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+        out, nc = L.gqa_apply(p["attn"], h, cfg, positions=positions,
+                              cache=sub, window=s.window, causal=s.causal,
+                              ring=bool(cfg.window_ring_cache and s.window))
+        if nc is not None:
+            new_cache.update(nc)
+    x = x + out
+
+    if s.cross and s.kind == "A":
+        hc = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        if enc_out is not None:
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+            if new_cache is not None:
+                new_cache["cross_k"] = ck.astype(new_cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(new_cache["cross_v"].dtype)
+        else:
+            ck, cv = cache["cross_k"], cache["cross_v"]
+        out, _ = L.gqa_apply(p["cross"], hc, cfg, positions=positions,
+                             cross_kv=(ck, cv))
+        x = x + out
+
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if s.is_moe:
+        fn = moe_fn or moe_apply_ragged
+        ff, a = fn(p["moe"], h2, cfg)
+        aux = aux + a
+    elif "mlp" in p:
+        ff = L.mlp_apply(p["mlp"], h2)
+    else:
+        ff = 0.0
+    x = x + ff
+    return x, new_cache, aux
+
+
+def _layer_cache_schema(cfg: ModelConfig, s: LayerSig, batch: int,
+                        max_len: int) -> Dict[str, ParamSpec]:
+    out: Dict[str, ParamSpec] = {}
+    if s.kind == "M":
+        out.update(ssm_cache_schema(cfg, batch))
+    elif cfg.attn_type == "mla":
+        m = cfg.mla
+        out["c_kv"] = ParamSpec((batch, max_len, m.kv_lora_rank),
+                                ("batch", "seq", "kv_lora"), cfg.dtype, "zeros")
+        out["k_rope"] = ParamSpec((batch, max_len, m.qk_rope_head_dim),
+                                  ("batch", "seq", ""), cfg.dtype, "zeros")
+    else:
+        # baseline allocates full max_len even for windowed layers; with
+        # cfg.window_ring_cache those layers hold a `window`-sized ring
+        # buffer instead (§Perf H4)
+        span = max_len
+        if cfg.window_ring_cache and s.window:
+            span = min(max_len, s.window)
+        kv = (batch, span, cfg.n_kv_heads, cfg.head_dim)
+        axes = ("batch", "seq", "kv_heads", "head_dim")
+        out["k"] = ParamSpec(kv, axes, cfg.dtype, "zeros")
+        out["v"] = ParamSpec(kv, axes, cfg.dtype, "zeros")
+    if s.cross and s.kind == "A":
+        ckv = (batch, cfg.encoder_seq_len, cfg.n_kv_heads, cfg.head_dim)
+        axes = ("batch", "", "kv_heads", "head_dim")
+        out["cross_k"] = ParamSpec(ckv, axes, cfg.dtype, "zeros")
+        out["cross_v"] = ParamSpec(ckv, axes, cfg.dtype, "zeros")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter schema for the full model
+# ---------------------------------------------------------------------------
+
+
+def _retag_dtype(schema, dtype: str):
+    """ParamSpecs default to bf16; retag to cfg.dtype (f32 smoke tests)."""
+    if dtype == "bfloat16":
+        return schema
+    return jax.tree_util.tree_map(
+        lambda s: (s if s.dtype != "bfloat16"
+                   else ParamSpec(s.shape, s.axes, dtype, s.init, s.scale)),
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def decoder_param_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.padded_vocab
+    prefix, block, n_blocks = layer_structure(cfg)
+    schema: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "d_model")),
+        "final_norm": L.rmsnorm_schema(d),
+        "prefix": [_layer_schema(cfg, s) for s in prefix],
+        "blocks": stack_specs(
+            {f"p{j}": _layer_schema(cfg, s) for j, s in enumerate(block)},
+            n_blocks),
+    }
+    if not cfg.tie_embeddings:
+        schema["lm_head"] = ParamSpec((V, d), ("vocab", "d_model"))
+    if cfg.modality == "vision":
+        me = cfg.modality_embed_dim
+        schema["projector"] = {
+            "w1": ParamSpec((me, d), ("", "d_model")),
+            "w2": ParamSpec((d, d), ("d_model", "d_model2")),
+        }
+    if cfg.is_encoder_decoder:
+        enc_sig = LayerSig("A", 0, False, False, causal=False)
+        schema["enc_pos"] = ParamSpec((cfg.encoder_seq_len, d), ("", "d_model"),
+                                      init="small")
+        schema["encoder"] = stack_specs(_layer_schema(cfg, enc_sig),
+                                        cfg.n_encoder_layers)
+        schema["enc_final_norm"] = L.rmsnorm_schema(d)
+    if cfg.mtp_depth:
+        mtp_sig = LayerSig("A", 0, False, False)
+        schema["mtp"] = {
+            "norm_h": L.rmsnorm_schema(d),
+            "norm_e": L.rmsnorm_schema(d),
+            "w_comb": ParamSpec((2 * d, d), ("", "d_model")),
+            "layer": _layer_schema(cfg, mtp_sig),
+            "final_norm": L.rmsnorm_schema(d),
+        }
+    return _retag_dtype(schema, cfg.dtype)
+
+
+def init_cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Decode-cache ShapeSpec tree (mirrors the param block structure)."""
+    prefix, block, n_blocks = layer_structure(cfg)
+    cache: Dict[str, Any] = {
+        "pos": ParamSpec((batch,), ("batch",), "int32", "zeros"),
+        "prefix": [_layer_cache_schema(cfg, s, batch, max_len) for s in prefix],
+        "blocks": stack_specs(
+            {f"p{j}": _layer_cache_schema(cfg, s, batch, max_len)
+             for j, s in enumerate(block)}, n_blocks),
+    }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_lookup(params, cfg: ModelConfig, tokens):
+    """Gather (default) or one-hot-matmul (§Perf H6) embedding lookup."""
+    if cfg.embed_one_hot:
+        w = params["embed"]
+        oh = jax.nn.one_hot(tokens, w.shape[0], dtype=w.dtype)
+        return oh @ w
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _embed_inputs(params, cfg: ModelConfig, inputs: Dict[str, jax.Array]):
+    """Token (+ modality) embedding.  Returns (x, positions, label_mask_extra)."""
+    tokens = inputs["tokens"]
+    B, S_txt = tokens.shape
+    x = _embed_lookup(params, cfg, tokens)
+    if cfg.modality == "vision" and "image_emb" in inputs:
+        pj = params["projector"]
+        img = jax.nn.gelu(inputs["image_emb"].astype(x.dtype) @ pj["w1"]) @ pj["w2"]
+        x = jnp.concatenate([img, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def _encode(params, cfg: ModelConfig, audio_emb):
+    """Whisper-style encoder over stub frame embeddings (B, T, d)."""
+    x = audio_emb + params["enc_pos"][None].astype(audio_emb.dtype)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    enc_sig = LayerSig("A", 0, False, False, causal=False)
+
+    def body(carry, lp):
+        h, _, _ = apply_layer(lp, carry, cfg, enc_sig, positions=positions)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", x, w).astype(jnp.float32)
+
+
+def forward_train(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                  *, moe_fn: Optional[Callable] = None):
+    """Full-sequence forward.  Returns (logits, aux) where aux holds the
+    MoE load-balance loss and optional MTP logits."""
+    prefix, block, n_blocks = layer_structure(cfg)
+    x, positions = _embed_inputs(params, cfg, inputs)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, inputs["audio_emb"])
+
+    aux = jnp.zeros((), jnp.float32)
+    for lp, s in zip(params["prefix"], prefix):
+        x, _, a = apply_layer(lp, x, cfg, s, positions=positions,
+                              enc_out=enc_out, moe_fn=moe_fn)
+        aux = aux + a
+
+    def block_body(carry, bp):
+        h, acc = carry
+        for j, s in enumerate(block):
+            h, _, a = apply_layer(bp[f"p{j}"], h, cfg, s, positions=positions,
+                                  enc_out=enc_out, moe_fn=moe_fn)
+            acc = acc + a
+        return (h, acc), None
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        block_body = jax.checkpoint(block_body, policy=policy,
+                                    prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(block_body, (x, aux), params["blocks"])
+
+    h_final = x
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    extras = {"aux_loss": aux}
+
+    if cfg.mtp_depth and "tokens" in inputs:
+        # DeepSeek-V3 multi-token prediction (depth 1): combine final
+        # hidden state at t with the embedding of token t+1, run one extra
+        # block, predict token t+2 through the shared head.
+        mp = params["mtp"]
+        tok_emb = jnp.take(params["embed"], inputs["tokens"], axis=0)
+        if cfg.modality == "vision" and "image_emb" in inputs:
+            n_img = h_final.shape[1] - tok_emb.shape[1]
+            h_txt = h_final[:, n_img:]
+        else:
+            h_txt = h_final
+        h_in = jnp.concatenate(
+            [L.rmsnorm(mp["norm_h"], h_txt[:, :-1], cfg.norm_eps),
+             L.rmsnorm(mp["norm_e"], tok_emb[:, 1:], cfg.norm_eps)], axis=-1)
+        h_mtp = h_in @ mp["w_comb"]
+        pos_mtp = positions[:, : h_mtp.shape[1]]
+        mtp_sig = LayerSig("A", 0, False, False)
+        h_mtp, _, _ = apply_layer(mp["layer"], h_mtp, cfg, mtp_sig,
+                                  positions=pos_mtp)
+        h_mtp = L.rmsnorm(mp["final_norm"], h_mtp, cfg.norm_eps)
+        extras["mtp_logits"] = _unembed(params, cfg, h_mtp)
+
+    return logits, extras
+
+
+def forward_prefill(params, cfg: ModelConfig, inputs, cache,
+                    *, moe_fn: Optional[Callable] = None,
+                    mla_absorb: bool = False):
+    """Prefill: run the full prompt, fill the cache, return last logits."""
+    return _forward_cached(params, cfg, inputs, cache, moe_fn=moe_fn,
+                           mla_absorb=mla_absorb, prefill=True)
+
+
+def forward_decode(params, cfg: ModelConfig, inputs, cache,
+                   *, moe_fn: Optional[Callable] = None,
+                   mla_absorb: bool = False):
+    """One decode step: inputs["tokens"] is (B, 1)."""
+    return _forward_cached(params, cfg, inputs, cache, moe_fn=moe_fn,
+                           mla_absorb=mla_absorb, prefill=False)
+
+
+def _forward_cached(params, cfg, inputs, cache, *, moe_fn, mla_absorb, prefill):
+    prefix, block, n_blocks = layer_structure(cfg)
+    tokens = inputs["tokens"]
+    B, S = tokens.shape
+    x = _embed_lookup(params, cfg, tokens)
+    if cfg.modality == "vision" and "image_emb" in inputs and prefill:
+        pj = params["projector"]
+        img = jax.nn.gelu(inputs["image_emb"].astype(x.dtype) @ pj["w1"]) @ pj["w2"]
+        x = jnp.concatenate([img, x], axis=1)
+        S = x.shape[1]
+
+    if prefill:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        new_pos = jnp.full((B,), S, jnp.int32)
+    else:
+        positions = cache["pos"][:, None]
+        new_pos = cache["pos"] + 1
+
+    enc_out = None
+    if cfg.is_encoder_decoder and "audio_emb" in inputs:
+        enc_out = _encode(params, cfg, inputs["audio_emb"])
+
+    new_cache: Dict[str, Any] = {"pos": new_pos, "prefix": []}
+    for lp, lc, s in zip(params["prefix"], cache["prefix"], prefix):
+        x, nc, _ = apply_layer(lp, x, cfg, s, positions=positions, cache=lc,
+                               enc_out=enc_out, moe_fn=moe_fn,
+                               mla_absorb=mla_absorb)
+        new_cache["prefix"].append(nc)
+
+    def block_body(h, bp_bc):
+        bp, bc = bp_bc
+        ncs = {}
+        for j, s in enumerate(block):
+            h, nc, _ = apply_layer(bp[f"p{j}"], h, cfg, s, positions=positions,
+                                   cache=bc[f"p{j}"], enc_out=enc_out,
+                                   moe_fn=moe_fn, mla_absorb=mla_absorb)
+            ncs[f"p{j}"] = nc
+        return h, ncs
+
+    x, blocks_cache = jax.lax.scan(block_body, x,
+                                   (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = blocks_cache
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def chunked_ce(x, w, labels, *, ignore_id: int = -1, z_loss: float = 1e-4,
+               chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    x: (B, S, d) final hidden states; w: (V, d) unembedding.  The scan
+    body is rematerialized so only per-chunk logits ever exist — the
+    production trick that keeps 256k-vocab training inside HBM.
+    Returns (sum_nll, n_valid).
+    """
+    B, S, d = x.shape
+    c = min(chunk, S)
+    while S % c != 0:
+        c -= 1
+    n = S // c
+    xs = x.reshape(B, n, c, d).swapaxes(0, 1)
+    ls = labels.reshape(B, n, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, args):
+        xc, lc = args
+        valid = lc != ignore_id
+        lab = jnp.where(valid, lc, 0)
+        logits = jnp.einsum("bcd,vd->bcv", xc, w).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        nll = nll + z_loss * lse ** 2
+        s, nv = acc
+        s = s + jnp.sum(jnp.where(valid, nll, 0.0))
+        return (s, nv + jnp.sum(valid)), None
+
+    (tot, nvalid), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                           jnp.zeros((), jnp.int32)), (xs, ls))
+    return tot, nvalid
+
+
+def forward_train_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                       *, moe_fn: Optional[Callable] = None,
+                       mtp_weight: float = 0.3):
+    """Memory-lean training loss: backbone + chunked CE (+ MTP)."""
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    labels = batch["labels"]
+    prefix, block, n_blocks = layer_structure(cfg)
+    x, positions = _embed_inputs(params, cfg, inputs)
+    enc_out = _encode(params, cfg, inputs["audio_emb"]) \
+        if cfg.is_encoder_decoder else None
+
+    aux = jnp.zeros((), jnp.float32)
+    for lp, s in zip(params["prefix"], prefix):
+        x, _, a = apply_layer(lp, x, cfg, s, positions=positions,
+                              enc_out=enc_out, moe_fn=moe_fn)
+        aux = aux + a
+
+    def block_body(carry, bp):
+        h, acc = carry
+        for j, s in enumerate(block):
+            h, _, a = apply_layer(bp[f"p{j}"], h, cfg, s, positions=positions,
+                                  enc_out=enc_out, moe_fn=moe_fn)
+            acc = acc + a
+        return (h, acc), None
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        block_body = jax.checkpoint(block_body, policy=policy,
+                                    prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(block_body, (x, aux), params["blocks"])
+
+    h_final = x
+    xn = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    S_txt = labels.shape[1]
+    tot, nvalid = chunked_ce(xn[:, -S_txt:], w, labels)
+    loss = tot / jnp.maximum(nvalid, 1) + aux
+
+    if cfg.mtp_depth:
+        mp = params["mtp"]
+        tok_emb = jnp.take(params["embed"], inputs["tokens"], axis=0)
+        h_txt = h_final[:, -S_txt:]
+        h_in = jnp.concatenate(
+            [L.rmsnorm(mp["norm_h"], h_txt[:, :-1], cfg.norm_eps),
+             L.rmsnorm(mp["norm_e"], tok_emb[:, 1:], cfg.norm_eps)], axis=-1)
+        h_mtp = h_in @ mp["w_comb"]
+        mtp_sig = LayerSig("A", 0, False, False)
+        h_mtp, _, _ = apply_layer(mp["layer"], h_mtp, cfg, mtp_sig,
+                                  positions=positions[:, : h_mtp.shape[1]])
+        h_mtp = L.rmsnorm(mp["final_norm"], h_mtp, cfg.norm_eps)
+        mtot, mn = chunked_ce(h_mtp, w, labels[:, 1:])
+        loss = loss + mtp_weight * mtot / jnp.maximum(mn, 1)
+
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(logits, labels, *, extras=None, ignore_id: int = -1,
+            mtp_weight: float = 0.3, z_loss: float = 1e-4):
+    """Next-token CE with ignore mask, MoE aux loss, optional MTP loss."""
+    V = logits.shape[-1]
+    S = labels.shape[1]
+    logits_txt = logits[:, -S:]  # drop modality positions
+    valid = labels != ignore_id
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits_txt, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    lse = jax.nn.logsumexp(logits_txt, axis=-1)
+    nll = nll + z_loss * lse ** 2
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    if extras:
+        loss = loss + extras.get("aux_loss", 0.0)
+        if "mtp_logits" in extras:
+            # MTP predicts token t+2 from position t: shift labels by one.
+            ml = extras["mtp_logits"]
+            mlab = labels[:, 1:]
+            mval = mlab != ignore_id
+            mlab_s = jnp.where(mval, mlab, 0)
+            mlogp = jax.nn.log_softmax(ml, axis=-1)
+            mnll = -jnp.take_along_axis(mlogp, mlab_s[..., None], axis=-1)[..., 0]
+            mdenom = jnp.maximum(jnp.sum(mval), 1)
+            loss = loss + mtp_weight * jnp.sum(jnp.where(mval, mnll, 0.0)) / mdenom
+    return loss

@@ -1,0 +1,3 @@
+from repro.retrieval.bm25 import BM25Index
+
+__all__ = ["BM25Index"]

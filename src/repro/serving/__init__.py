@@ -1,0 +1,3 @@
+from repro.serving.pipeline import RAGPipeline, ActionOutcome
+
+__all__ = ["RAGPipeline", "ActionOutcome"]

@@ -1,0 +1,71 @@
+"""Batched generation engine: prefill + decode loop over a KV cache.
+
+Used by the local-model generation backend and the serve driver.  The
+decode step is jitted once per (batch, max_len) bucket; requests are
+left-padded into fixed buckets — the standard static-shape TPU serving
+pattern.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS, PAD
+from repro.models.registry import Model
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray       # (B, T_out)
+    n_steps: int
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, max_len: int = 512,
+                 moe_fn: Optional[Callable] = None, mla_absorb: bool = False):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.moe_fn = moe_fn
+        self.mla_absorb = mla_absorb
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+
+    def _prefill_fn(self, params, cache, tokens):
+        logits, cache = self.model.prefill(params, {"tokens": tokens}, cache,
+                                           moe_fn=self.moe_fn,
+                                           mla_absorb=self.mla_absorb)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    def _decode_fn(self, params, cache, tokens):
+        logits, cache = self.model.decode(params, {"tokens": tokens}, cache,
+                                          moe_fn=self.moe_fn,
+                                          mla_absorb=self.mla_absorb)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16
+                 ) -> GenerationResult:
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.full((B, plen), PAD, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p  # right-pad; simple bucket
+        cache = self.model.init_cache(B, plen + max_new_tokens)
+        nxt, cache = self._prefill(self.params, cache, jnp.asarray(toks))
+        out = [np.asarray(nxt)]
+        tok = nxt[:, None]
+        steps = 1
+        for _ in range(max_new_tokens - 1):
+            tok, cache = self._decode(self.params, cache, tok)
+            out.append(np.asarray(tok))
+            tok = tok[:, None]
+            steps += 1
+            if np.all(np.concatenate([o.reshape(B, -1) for o in out],
+                                     axis=1) == EOS):
+                break
+        return GenerationResult(np.stack([o.reshape(B) for o in out], axis=1),
+                                steps)

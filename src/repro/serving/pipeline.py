@@ -1,0 +1,66 @@
+"""The RAG pipeline executor: action -> retrieve -> generate -> score.
+
+This is the system under control: the SLO router picks an action, the
+pipeline executes it against the retrieval index and a generation
+backend, and emits the per-query metrics the reward (eq. 1) consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.actions import ACTIONS, Action
+from repro.data.synthetic_squad import Question
+from repro.generation.simulator import SimulatedGenerator
+from repro.retrieval.bm25 import BM25Index
+
+
+@dataclass
+class ActionOutcome:
+    qid: int
+    action: int
+    correct: bool
+    refused: bool
+    hallucinated: bool
+    cost_tokens: float
+    hit: bool                 # gold answer string in retrieved set
+    answerable: bool
+    answer: str
+
+    def to_row(self) -> dict:
+        return asdict(self)
+
+
+class RAGPipeline:
+    def __init__(self, index: BM25Index, generator: SimulatedGenerator):
+        self.index = index
+        self.generator = generator
+
+    def retrieve(self, question: str, k: int) -> Sequence[str]:
+        if k <= 0:
+            return []
+        idx, _ = self.index.topk(question, k)
+        return [self.index.texts[i] for i in idx]
+
+    def execute(self, q: Question, action: Action) -> ActionOutcome:
+        if action.mode == "refuse":
+            out = self.generator.refuse(q.qid, q.text)
+            hit = False
+        else:
+            passages = self.retrieve(q.text, action.k)
+            out = self.generator.generate(
+                q.qid, action.idx, action.mode, q.text, passages,
+                answerable=q.answerable, gold_answer=q.gold_answer)
+            hit = bool(q.gold_answer) and any(
+                q.gold_answer in p for p in passages)
+        return ActionOutcome(
+            qid=q.qid, action=action.idx, correct=out.correct,
+            refused=out.refused, hallucinated=out.hallucinated,
+            cost_tokens=float(out.cost_tokens), hit=hit,
+            answerable=q.answerable, answer=out.answer)
+
+    def sweep(self, q: Question) -> list:
+        """Full action sweep (paper §4.1) — one outcome per action."""
+        return [self.execute(q, a) for a in ACTIONS]

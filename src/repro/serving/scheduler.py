@@ -1,0 +1,139 @@
+"""Request scheduler: SLO-routed batched serving with budget feedback.
+
+The production loop the paper's controller lives in:
+
+  queue -> route (policy, per-request SLO) -> group by action bucket
+        -> execute buckets (retrieval batched per depth, generation
+           batched per mode) -> record outcomes -> error budgets
+        -> (adaptive mitigation) budget burn tightens the refusal share.
+
+Generation executes through the RAGPipeline backend (simulator or local
+JAX model); batching here is the control-plane batching — the engine's
+prefill/decode batching is exercised by examples/serve_rag_slo.py.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.actions import ACTIONS, REFUSE_ACTION, SLO_PROFILES, reward
+from repro.core.config import RouterConfig, SLOProfile
+from repro.core.features import state_vector
+from repro.core.policy import policy_logits
+from repro.core.serving_types import RequestOutcome
+from repro.data.synthetic_squad import Question
+from repro.serving.pipeline import RAGPipeline
+from repro.serving.slo_budget import DEFAULT_TARGETS, SLOBudgetTracker
+
+import jax.numpy as jnp
+
+
+@dataclass
+class Request:
+    qid: int
+    question: Question
+    slo: str = "quality_first"
+    arrival_ms: float = 0.0
+
+
+@dataclass
+class SchedulerStats:
+    served: int = 0
+    total_reward: float = 0.0
+    action_counts: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
+    refusal_cap_history: List[float] = field(default_factory=list)
+
+    @property
+    def avg_reward(self) -> float:
+        return self.total_reward / max(self.served, 1)
+
+
+class Scheduler:
+    """Micro-batching scheduler with adaptive refusal back-pressure."""
+
+    def __init__(self, pipeline: RAGPipeline, policy_params, router_cfg:
+                 RouterConfig, *, index=None, max_batch: int = 16,
+                 adaptive_refusal: bool = True, base_refusal_share: float = 0.6):
+        self.pipe = pipeline
+        self.params = policy_params
+        self.rcfg = router_cfg
+        self.index = index if index is not None else pipeline.index
+        self.max_batch = max_batch
+        self.adaptive = adaptive_refusal
+        self.base_share = base_refusal_share
+        self.budget = SLOBudgetTracker(DEFAULT_TARGETS)
+        self.stats = SchedulerStats()
+        self.queue: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, reqs: Sequence[Request]) -> None:
+        self.queue.extend(reqs)
+
+    def _route(self, batch: List[Request]) -> np.ndarray:
+        states = np.stack([state_vector(r.question.text, self.index,
+                                        self.rcfg) for r in batch])
+        logits = np.asarray(policy_logits(self.params, jnp.asarray(states),
+                                          self.rcfg))
+        acts = logits.argmax(axis=-1)
+        if self.adaptive:
+            # budget back-pressure: cap the refuse share of this batch;
+            # demote the least-confident refusals to the runner-up action
+            cap = self.budget.refusal_cap_adjustment(self.base_share)
+            self.stats.refusal_cap_history.append(cap)
+            is_ref = acts == REFUSE_ACTION
+            n_allowed = int(cap * len(batch))
+            if is_ref.sum() > n_allowed:
+                margin = logits[:, REFUSE_ACTION] - np.partition(
+                    logits, -2, axis=1)[:, -2]
+                order = np.argsort(np.where(is_ref, margin, np.inf))
+                for i in order[: int(is_ref.sum()) - n_allowed]:
+                    runner = np.argsort(logits[i])[-2]
+                    acts[i] = runner
+        return acts
+
+    def step(self) -> Optional[SchedulerStats]:
+        """Serve one micro-batch off the queue."""
+        if not self.queue:
+            return None
+        batch, self.queue = self.queue[: self.max_batch], \
+            self.queue[self.max_batch:]
+        acts = self._route(batch)
+
+        # bucket by action so each retrieval depth runs as one batch
+        buckets: Dict[int, List[int]] = defaultdict(list)
+        for i, a in enumerate(acts):
+            buckets[int(a)].append(i)
+
+        for a, idxs in sorted(buckets.items()):
+            action = ACTIONS[a]
+            for i in idxs:
+                r = batch[i]
+                t0 = time.time()
+                out = self.pipe.execute(r.question, action)
+                profile = SLO_PROFILES[r.slo]
+                rew = reward(profile, correct=out.correct,
+                             cost_tokens=out.cost_tokens,
+                             hallucinated=out.hallucinated,
+                             refused=out.refused,
+                             answerable=out.answerable,
+                             pre_retrieval=(a == REFUSE_ACTION))
+                outcome = RequestOutcome(
+                    qid=r.qid, action=a, correct=out.correct,
+                    refused=out.refused, hallucinated=out.hallucinated,
+                    cost_tokens=out.cost_tokens,
+                    answerable=out.answerable,
+                    latency_ms=(time.time() - t0) * 1e3)
+                self.budget.record(outcome)
+                self.stats.served += 1
+                self.stats.total_reward += rew
+                self.stats.action_counts[a] += 1
+        return self.stats
+
+    def drain(self) -> SchedulerStats:
+        while self.queue:
+            self.step()
+        return self.stats

@@ -1,0 +1,99 @@
+"""SLO compliance tracking with SRE-style error budgets.
+
+The paper frames routing against service-level *objectives* and cites
+Beyer et al.'s SRE book; this module closes that loop operationally:
+each SLO becomes a target + window + error budget, the serving layer
+records per-request outcomes, and the budget state can drive the router
+(e.g. tighten the refusal cap when the refusal budget burns hot).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.core.serving_types import RequestOutcome
+
+
+@dataclass(frozen=True)
+class SLOTarget:
+    name: str
+    metric: str              # refusal | hallucination | cost_tokens | error
+    threshold: float         # per-request bad-event definition for costs
+    objective: float         # e.g. 0.95 = "≤5% of requests may violate"
+    window: int = 500        # sliding window (requests)
+
+    @property
+    def error_budget(self) -> float:
+        return 1.0 - self.objective
+
+
+@dataclass
+class BudgetState:
+    target: SLOTarget
+    events: Deque[bool] = field(default_factory=deque)  # True = violation
+
+    def record(self, outcome: RequestOutcome) -> None:
+        m = self.target.metric
+        if m == "refusal":
+            bad = outcome.refused and outcome.answerable
+        elif m == "hallucination":
+            bad = outcome.hallucinated
+        elif m == "cost_tokens":
+            bad = outcome.cost_tokens > self.target.threshold
+        elif m == "error":
+            bad = (not outcome.correct) and (not outcome.refused)
+        else:
+            raise ValueError(m)
+        self.events.append(bool(bad))
+        while len(self.events) > self.target.window:
+            self.events.popleft()
+
+    @property
+    def violation_rate(self) -> float:
+        return (sum(self.events) / len(self.events)) if self.events else 0.0
+
+    @property
+    def budget_consumed(self) -> float:
+        """Fraction of the error budget burned (>1 = SLO breached)."""
+        eb = self.target.error_budget
+        return self.violation_rate / eb if eb > 0 else float("inf")
+
+    @property
+    def healthy(self) -> bool:
+        return self.budget_consumed <= 1.0
+
+
+class SLOBudgetTracker:
+    """Tracks several targets; exposes router back-pressure signals."""
+
+    def __init__(self, targets: List[SLOTarget]):
+        self.states: Dict[str, BudgetState] = {
+            t.name: BudgetState(t) for t in targets}
+
+    def record(self, outcome: RequestOutcome) -> None:
+        for s in self.states.values():
+            s.record(outcome)
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        return {name: {"violation_rate": round(s.violation_rate, 4),
+                       "budget_consumed": round(s.budget_consumed, 3),
+                       "healthy": s.healthy}
+                for name, s in self.states.items()}
+
+    def refusal_cap_adjustment(self, base_cap: float) -> float:
+        """Back-pressure hook: tighten the policy's refusal cap as the
+        wrong-refusal budget burns (the §7.1 mitigation made adaptive)."""
+        s = self.states.get("refusal")
+        if s is None or not s.events:
+            return base_cap
+        burn = min(s.budget_consumed, 2.0)
+        return max(0.05, base_cap * (1.0 - 0.5 * max(0.0, burn - 0.5)))
+
+
+DEFAULT_TARGETS = [
+    SLOTarget("refusal", "refusal", 0.0, objective=0.90),
+    SLOTarget("hallucination", "hallucination", 0.0, objective=0.70),
+    SLOTarget("cost", "cost_tokens", 800.0, objective=0.95),
+    SLOTarget("error", "error", 0.0, objective=0.60),
+]

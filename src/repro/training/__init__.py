@@ -1,0 +1,5 @@
+from repro.training.optimizer import OptConfig, adamw_init_schema, adamw_update
+from repro.training.steps import make_train_step, make_eval_step
+
+__all__ = ["OptConfig", "adamw_init_schema", "adamw_update",
+           "make_train_step", "make_eval_step"]

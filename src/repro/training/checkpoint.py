@@ -1,0 +1,65 @@
+"""Checkpointing: flat-key npz with pytree structure manifest.
+
+No orbax in this container; .npz + a JSON treedef is enough for
+single-host examples and keeps restore deterministic.  Sharded arrays
+are gathered before save (fine at example scale; a production TPU
+deployment would swap in orbax behind the same interface).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = jax.device_get(leaf)
+        if str(arr.dtype) == "bfloat16":  # numpy can't serialize bf16
+            arr = np.asarray(arr, np.float32)
+        flat[key] = np.asarray(arr)
+    return flat
+
+
+def save_checkpoint(path: str | Path, step: int, params, opt_state=None,
+                    extra: dict | None = None):
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path / f"params_{step}.npz", **_flatten(params))
+    if opt_state is not None:
+        np.savez_compressed(path / f"opt_{step}.npz", **_flatten(opt_state))
+    meta = {"step": step, "extra": extra or {}}
+    (path / "latest.json").write_text(json.dumps(meta))
+    return path / f"params_{step}.npz"
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+def load_checkpoint(path: str | Path, template_params,
+                    template_opt=None) -> Tuple[int, Any, Any]:
+    path = Path(path)
+    meta = json.loads((path / "latest.json").read_text())
+    step = meta["step"]
+    z = np.load(path / f"params_{step}.npz")
+    params = _unflatten_into(template_params, dict(z))
+    opt = None
+    if template_opt is not None and (path / f"opt_{step}.npz").exists():
+        zo = np.load(path / f"opt_{step}.npz")
+        opt = _unflatten_into(template_opt, dict(zo))
+    return step, params, opt

@@ -1,0 +1,73 @@
+"""Train / eval steps with optional microbatch gradient accumulation."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.models.transformer import forward_train_loss, loss_fn
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def _split_microbatches(batch, n_mb: int):
+    def f(x):
+        b = x.shape[0]
+        assert b % n_mb == 0, (b, n_mb)
+        return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+    return jax.tree_util.tree_map(f, batch)
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    *, moe_fn: Optional[Callable] = None,
+                    microbatches: int = 1, fused_loss: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` is a dict with "tokens", "labels" (+ modality inputs).
+    ``microbatches > 1`` runs scan-based gradient accumulation — the
+    production lever that bounds saved-activation memory at train_4k.
+    ``fused_loss`` computes CE chunk-wise without materializing the
+    (B, S, V) logits tensor (required at 100k+ vocabularies).
+    """
+
+    def loss_for(params, mb):
+        if fused_loss:
+            return forward_train_loss(params, model.cfg, mb, moe_fn=moe_fn)
+        inputs = {k: v for k, v in mb.items() if k != "labels"}
+        logits, extras = model.train_logits(params, inputs, moe_fn=moe_fn)
+        return loss_fn(logits, mb["labels"], extras=extras)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_for)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_for)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, lsum + l), None
+
+            (grads, lsum), _ = jax.lax.scan(body, (zero, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = lsum / microbatches
+
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, *, moe_fn: Optional[Callable] = None):
+    def eval_step(params, batch):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, extras = model.train_logits(params, inputs, moe_fn=moe_fn)
+        return loss_fn(logits, batch["labels"], extras=extras)
+    return eval_step

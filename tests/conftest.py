@@ -1,0 +1,16 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single CPU device; only
+# repro.launch.dryrun (its own process) requests 512 placeholder devices.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

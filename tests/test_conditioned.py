@@ -1,0 +1,43 @@
+"""Beyond-paper modules: SLO-conditioned policy + profile interpolation."""
+import numpy as np
+import pytest
+
+from repro.core.actions import SLO_PROFILES
+from repro.core.conditioned import (conditioned_actions, interpolate,
+                                    profile_vector, train_conditioned)
+from repro.core.config import RouterConfig, TestbedConfig
+from repro.core.metrics import evaluate_actions
+from repro.core.offline_log import build_testbed
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    cfg = TestbedConfig(n_train=250, n_eval=80, n_paragraphs=250,
+                        router=RouterConfig(n_epochs=10))
+    return cfg, build_testbed(cfg)
+
+
+def test_interpolation_endpoints():
+    a, b = SLO_PROFILES["quality_first"], SLO_PROFILES["cheap"]
+    np.testing.assert_allclose(profile_vector(interpolate(a, b, 0.0)),
+                               profile_vector(a))
+    np.testing.assert_allclose(profile_vector(interpolate(a, b, 1.0)),
+                               profile_vector(b))
+    mid = profile_vector(interpolate(a, b, 0.5))
+    np.testing.assert_allclose(
+        mid, 0.5 * (profile_vector(a) + profile_vector(b)))
+
+
+def test_conditioned_policy_adapts_to_profile(testbed):
+    """One policy must behave differently under different SLO inputs."""
+    cfg, (_, _, _, train_log, eval_log) = testbed
+    profiles = [SLO_PROFILES["quality_first"], SLO_PROFILES["cheap"]]
+    result, ccfg = train_conditioned(train_log, profiles, cfg.router,
+                                     n_interp=1)
+    acts_q = conditioned_actions(result, ccfg, eval_log, profiles[0])
+    acts_c = conditioned_actions(result, ccfg, eval_log, profiles[1])
+    # the cheap conditioning must refuse more than the quality one
+    assert (acts_c == 4).mean() > (acts_q == 4).mean()
+    rep_q = evaluate_actions(eval_log, acts_q, profiles[0], "q")
+    rep_c = evaluate_actions(eval_log, acts_c, profiles[1], "c")
+    assert rep_q.cost > rep_c.cost  # quality profile spends more

@@ -1,0 +1,191 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bm25_scores, flash_attention, ssd_chunk_scan
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _key(i):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# BM25
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Q,D,V", [(8, 128, 512), (16, 256, 1024),
+                                   (8, 64, 512), (1, 128, 512)])
+def test_bm25_matches_ref(Q, D, V):
+    qtf = (jax.random.uniform(_key(0), (Q, V)) < 0.02).astype(jnp.float32)
+    tf = jnp.round(jax.random.uniform(_key(1), (D, V)) * 4)
+    dl = tf.sum(1)
+    idf = jax.random.uniform(_key(2), (V,)) + 0.1
+    got = bm25_scores(qtf, tf, dl, idf)
+    k1, b = 1.2, 0.75
+    norm = (k1 * (1 - b + b * dl / (dl.mean() + 1e-6)))[:, None]
+    want = ref.bm25_ref(qtf * idf[None], tf, norm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bm25_matches_index_oracle():
+    """Kernel path == BM25Index numpy scoring on the real corpus."""
+    from repro.core.config import RetrievalConfig
+    from repro.data.synthetic_squad import SyntheticSquad
+    from repro.retrieval.bm25 import BM25Index
+
+    data = SyntheticSquad(n_paragraphs=128, n_questions=8, seed=1)
+    idx = BM25Index.build([p.text for p in data.paragraphs],
+                          RetrievalConfig(vocab_hash_dim=1024))
+    queries = [q.text for q in data.questions]
+    qv = np.stack([idx.query_vector(q) for q in queries])
+    got = np.asarray(bm25_scores(jnp.asarray(qv), jnp.asarray(idx.tf),
+                                 jnp.asarray(idx.doc_len),
+                                 jnp.asarray(idx.idf)))
+    want = np.stack([idx.scores_np(v) for v in qv])
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,Dh", [
+    (2, 128, 128, 4, 4, 64),
+    (1, 256, 256, 4, 2, 32),
+    (2, 64, 64, 8, 1, 128),
+])
+def test_flash_attention_matches_ref(B, Sq, Skv, H, Hkv, Dh, dtype):
+    q = jax.random.normal(_key(3), (B, Sq, H, Dh), dtype)
+    k = jax.random.normal(_key(4), (B, Skv, Hkv, Dh), dtype)
+    v = jax.random.normal(_key(5), (B, Skv, Hkv, Dh), dtype)
+    got = flash_attention(q, k, v, block_q=64, block_kv=64)
+    G = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    kf = jnp.repeat(k, G, 2).transpose(0, 2, 1, 3).reshape(B * H, Skv, Dh)
+    vf = jnp.repeat(v, G, 2).transpose(0, 2, 1, 3).reshape(B * H, Skv, Dh)
+    want = ref.flash_attention_ref(qf, kf, vf).reshape(B, H, Sq, Dh) \
+        .transpose(0, 2, 1, 3)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_non_causal():
+    B, S, D = 2, 128, 64
+    q = jax.random.normal(_key(6), (B, S, D))
+    k = jax.random.normal(_key(7), (B, S, D))
+    v = jax.random.normal(_key(8), (B, S, D))
+    got = flash_attention_pallas(q, k, v, causal=False, block_q=64,
+                                 block_kv=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_causality_property():
+    """Changing future kv must not change past outputs."""
+    B, S, D = 1, 128, 32
+    q = jax.random.normal(_key(9), (B, S, D))
+    k = jax.random.normal(_key(10), (B, S, D))
+    v = jax.random.normal(_key(11), (B, S, D))
+    o1 = flash_attention_pallas(q, k, v, interpret=True, block_q=64,
+                                block_kv=64)
+    k2 = k.at[:, 100:].set(7.0)
+    v2 = v.at[:, 100:].set(-3.0)
+    o2 = flash_attention_pallas(q, k2, v2, interpret=True, block_q=64,
+                                block_kv=64)
+    np.testing.assert_allclose(np.asarray(o1[:, :100]),
+                               np.asarray(o2[:, :100]), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+@pytest.mark.parametrize("B,S,H,hd,G,N", [
+    (2, 256, 4, 32, 2, 16),
+    (1, 128, 2, 64, 1, 32),
+])
+def test_ssd_matches_sequential_ref(B, S, H, hd, G, N, chunk):
+    x = jax.random.normal(_key(12), (B, S, H, hd))
+    B_ = jax.random.normal(_key(13), (B, S, G, N)) * 0.5
+    C_ = jax.random.normal(_key(14), (B, S, G, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(_key(15), (B, S, H)))
+    A_log = jnp.zeros(H)
+    got = ssd_chunk_scan(x, B_, C_, dt, A_log, chunk=chunk)
+    a = -jnp.exp(A_log)
+    rep = H // G
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    Bf = jnp.repeat(B_, rep, 2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    Cf = jnp.repeat(C_, rep, 2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    da = (dt * a).transpose(0, 2, 1).reshape(B * H, S)
+    want = ref.ssd_scan_ref(xdt, Bf, Cf, da).reshape(B, H, S, hd) \
+        .transpose(0, 2, 1, 3)
+    denom = float(jnp.abs(want).max()) + 1e-9
+    err = float(jnp.abs(got - want).max()) / denom
+    assert err < 5e-5, err
+
+
+def test_ssd_chunk_invariance():
+    """Same result regardless of chunk size (associativity of the scan)."""
+    B, S, H, hd, G, N = 1, 256, 2, 32, 1, 16
+    x = jax.random.normal(_key(16), (B, S, H, hd))
+    B_ = jax.random.normal(_key(17), (B, S, G, N)) * 0.5
+    C_ = jax.random.normal(_key(18), (B, S, G, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(_key(19), (B, S, H)))
+    A_log = jnp.zeros(H)
+    y32 = ssd_chunk_scan(x, B_, C_, dt, A_log, chunk=32)
+    y256 = ssd_chunk_scan(x, B_, C_, dt, A_log, chunk=256)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y256),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_vs_model_chunked_path():
+    """Pallas kernel == the model's jnp ssd_chunked implementation."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, hd, G, N = 2, 128, 4, 32, 2, 16
+    x = jax.random.normal(_key(20), (B, S, H, hd))
+    B_ = jax.random.normal(_key(21), (B, S, G, N)) * 0.5
+    C_ = jax.random.normal(_key(22), (B, S, G, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(_key(23), (B, S, H)))
+    A_log = jnp.zeros(H)
+    y_model, _ = ssd_chunked(x, B_, C_, dt, A_log, 64)
+    y_kernel = ssd_chunk_scan(x, B_, C_, dt, A_log, chunk=64)
+    np.testing.assert_allclose(np.asarray(y_model, np.float32),
+                               np.asarray(y_kernel, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_model_integration_pallas_paths():
+    """Model forward with use_pallas_{attention,ssd} == jnp paths."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    for arch, flag in [("command-r-35b", "use_pallas_attention"),
+                       ("mamba2-130m", "use_pallas_ssd")]:
+        cfg = dataclasses.replace(get_config(arch, "smoke"),
+                                  dtype="float32")
+        cfg_k = dataclasses.replace(cfg, **{flag: True})
+        model = build_model(cfg)
+        model_k = build_model(cfg_k)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                                  cfg.vocab_size)
+        l0, _ = model.train_logits(params, {"tokens": toks})
+        l1, _ = model_k.train_logits(params, {"tokens": toks})
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=5e-3, atol=5e-3,
+                                   err_msg=f"{arch} pallas path diverges")

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.actions import SLO_PROFILES, reward
+from repro.core.config import SLOProfile
+from repro.models.schema import ParamSpec
+
+profiles = st.sampled_from(list(SLO_PROFILES.values()))
+
+
+@settings(max_examples=200, deadline=None)
+@given(profiles, st.floats(0, 5000), st.floats(0, 5000),
+       st.booleans(), st.booleans())
+def test_reward_monotone_in_cost(p, c1, c2, correct, answerable):
+    """More tokens never increases reward, all else equal."""
+    lo, hi = sorted([c1, c2])
+    r_lo = reward(p, correct=correct, cost_tokens=lo, hallucinated=False,
+                  refused=False, answerable=answerable)
+    r_hi = reward(p, correct=correct, cost_tokens=hi, hallucinated=False,
+                  refused=False, answerable=answerable)
+    assert r_hi <= r_lo + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(profiles, st.floats(0, 2000), st.booleans())
+def test_hallucination_never_helps(p, cost, answerable):
+    r_h = reward(p, correct=False, cost_tokens=cost, hallucinated=True,
+                 refused=False, answerable=answerable)
+    r_n = reward(p, correct=False, cost_tokens=cost, hallucinated=False,
+                 refused=False, answerable=answerable)
+    assert r_h <= r_n
+
+
+@settings(max_examples=200, deadline=None)
+@given(profiles, st.floats(0, 2000))
+def test_refusal_credit_sign(p, cost):
+    """Correct refusal ≥ incorrect refusal; pre-retrieval credit scaled."""
+    r_good = reward(p, correct=False, cost_tokens=cost, hallucinated=False,
+                    refused=True, answerable=False)
+    r_bad = reward(p, correct=False, cost_tokens=cost, hallucinated=False,
+                   refused=True, answerable=True)
+    assert r_good >= r_bad
+    r_pre = reward(p, correct=False, cost_tokens=cost, hallucinated=False,
+                   refused=True, answerable=False, pre_retrieval=True)
+    assert r_pre <= r_good + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.01, 3.0), st.floats(0, 1000), st.booleans())
+def test_correct_beats_incorrect(w_acc, cost, answerable):
+    p = SLOProfile(name="t", w_acc=w_acc, w_cost=0.1, w_hall=0.3, w_ref=0.1)
+    r_c = reward(p, correct=True, cost_tokens=cost, hallucinated=False,
+                 refused=False, answerable=answerable)
+    r_w = reward(p, correct=False, cost_tokens=cost, hallucinated=True,
+                 refused=False, answerable=answerable)
+    assert r_c > r_w
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolver properties
+# ---------------------------------------------------------------------------
+
+
+def _mesh(shape=(4, 2), axes=("data", "model")):
+    import jax
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices() * n)[:n].reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(devs, axes)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(st.sampled_from(["d_model", "d_ff", "heads", "kv_heads",
+                              "head_dim", "vocab", "", "batch", "seq"]),
+             min_size=1, max_size=4),
+    st.lists(st.integers(1, 9), min_size=4, max_size=4),
+)
+def test_resolver_only_shards_divisible_dims(axes, dim_seeds):
+    from repro.sharding import resolve_spec, mesh_axis_sizes
+    mesh = _mesh()
+    sizes = mesh_axis_sizes(mesh)
+    shape = tuple(d * 2 for d in dim_seeds[:len(axes)])
+    ps = ParamSpec(shape, tuple(axes))
+    spec = resolve_spec(ps, mesh)
+    used = []
+    for entry, dim in zip(spec, ps.shape):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes[n] for n in names]))
+        assert dim % prod == 0, (spec, ps)
+        used.extend(names)
+    assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
+
+
+def test_resolver_head_fallback():
+    """40 heads on a 16-way model axis must fall back, not crash."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.sharding import resolve_spec
+    devs = np.array(jax.devices() * 16)[:16].reshape(1, 16)
+    mesh = Mesh(devs, ("data", "model"))
+    ps = ParamSpec((512, 40, 128), ("d_model", "heads", "head_dim"))
+    spec = resolve_spec(ps, mesh)
+    assert spec[1] is None          # 40 % 16 != 0
+    assert spec[2] == "model"       # head_dim fallback

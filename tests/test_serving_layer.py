@@ -1,0 +1,133 @@
+"""Serving layer: scheduler, error budgets, int8 KV cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import RouterConfig, TestbedConfig
+from repro.core.offline_log import build_testbed
+from repro.core.policy import train_policy
+from repro.core.serving_types import RequestOutcome
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.slo_budget import (DEFAULT_TARGETS, SLOBudgetTracker,
+                                      SLOTarget)
+
+
+# --- error budgets ----------------------------------------------------------
+
+
+def _outcome(**kw):
+    base = dict(qid=0, action=0, correct=True, refused=False,
+                hallucinated=False, cost_tokens=100.0, answerable=True)
+    base.update(kw)
+    return RequestOutcome(**base)
+
+
+def test_budget_burn_and_health():
+    t = SLOTarget("refusal", "refusal", 0.0, objective=0.9, window=100)
+    tr = SLOBudgetTracker([t])
+    for _ in range(95):
+        tr.record(_outcome())
+    assert tr.states["refusal"].healthy
+    for _ in range(20):  # wrong refusals burn the budget
+        tr.record(_outcome(refused=True, answerable=True, correct=False))
+    rep = tr.report()["refusal"]
+    assert not rep["healthy"]
+    assert rep["budget_consumed"] > 1.0
+
+
+def test_budget_backpressure_tightens_cap():
+    tr = SLOBudgetTracker(DEFAULT_TARGETS)
+    base = 0.6
+    assert tr.refusal_cap_adjustment(base) == base
+    for _ in range(50):
+        tr.record(_outcome(refused=True, answerable=True, correct=False))
+    assert tr.refusal_cap_adjustment(base) < base
+
+
+def test_cost_budget_threshold():
+    t = SLOTarget("cost", "cost_tokens", 500.0, objective=0.5, window=10)
+    tr = SLOBudgetTracker([t])
+    for c in (100, 200, 900, 1000):
+        tr.record(_outcome(cost_tokens=c))
+    assert tr.states["cost"].violation_rate == pytest.approx(0.5)
+
+
+# --- scheduler --------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = TestbedConfig(n_train=200, n_eval=80, n_paragraphs=200,
+                        router=RouterConfig(n_epochs=10))
+    data, index, pipe, train_log, eval_log = build_testbed(cfg)
+    from repro.core.actions import SLO_PROFILES
+    tr = train_policy(train_log, train_log.rewards(SLO_PROFILES["cheap"]),
+                      cfg.router, objective="argmax_ce")
+    reqs = [Request(qid=q.qid, question=q, slo="cheap")
+            for q in data.questions[-80:]]
+    sched = Scheduler(pipe, tr.params, cfg.router, max_batch=16,
+                      adaptive_refusal=True, base_refusal_share=0.5)
+    sched.submit(reqs)
+    stats = sched.drain()
+    return sched, stats
+
+
+def test_scheduler_serves_all(served):
+    sched, stats = served
+    assert stats.served == 80
+    assert sum(stats.action_counts.values()) == 80
+
+
+def test_scheduler_caps_refusals(served):
+    """Adaptive back-pressure keeps refusal share at/below the cap even
+    for a collapse-prone cheap policy."""
+    sched, stats = served
+    ref_share = stats.action_counts.get(4, 0) / stats.served
+    assert ref_share <= 0.55 + 1e-9, ref_share
+    assert np.isfinite(stats.avg_reward)
+
+
+def test_budget_report_shapes(served):
+    sched, _ = served
+    rep = sched.budget.report()
+    assert set(rep) == {"refusal", "hallucination", "cost", "error"}
+
+
+# --- int8 KV cache ----------------------------------------------------------
+
+
+def test_kv_quant_roundtrip_accuracy():
+    from repro.serving.kv_quant import dequantize, quantize
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 128)) * 3.0
+    q, s = quantize(x)
+    y = dequantize(q, s, jnp.float32)
+    rel = float(jnp.abs(y - x).max() / jnp.abs(x).max())
+    assert rel < 0.02
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float16
+
+
+def test_kv_quant_attention_fidelity():
+    """Attention over an int8 cache ≈ attention over the bf16 cache."""
+    from repro.models.layers import attention
+    from repro.serving.kv_quant import dequantize, quantize
+    key = jax.random.PRNGKey(1)
+    B, S, H, D = 2, 64, 4, 32
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, H, D))
+    pos = jnp.full((B, 1), S - 1, jnp.int32)
+    o_ref = attention(q, k, v, q_pos=pos, causal=False)
+    kq, ks = quantize(k)
+    vq, vs = quantize(v)
+    o_q = attention(q, dequantize(kq, ks, jnp.float32),
+                    dequantize(vq, vs, jnp.float32), q_pos=pos, causal=False)
+    err = float(jnp.abs(o_q - o_ref).max())
+    assert err < 0.05, err
+
+
+def test_kv_quant_halves_bytes():
+    from repro.serving.kv_quant import cache_bytes
+    full = cache_bytes(128, 32768, 8, 128, quantized=False)
+    quant = cache_bytes(128, 32768, 8, 128, quantized=True)
+    assert quant < 0.53 * full

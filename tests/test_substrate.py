@@ -1,0 +1,201 @@
+"""Substrate units: retrieval, data, optimizer, checkpoint, OPE, engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import RetrievalConfig
+from repro.data.synthetic_squad import SyntheticSquad
+from repro.data.tokenizer import HashTokenizer
+from repro.retrieval.bm25 import BM25Index
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    data = SyntheticSquad(n_paragraphs=200, n_questions=200, seed=2)
+    idx = BM25Index.build([p.text for p in data.paragraphs],
+                          RetrievalConfig(vocab_hash_dim=2048))
+    return data, idx
+
+
+# --- data invariants -------------------------------------------------------
+
+
+def test_answerable_gold_in_gold_paragraph(corpus):
+    data, _ = corpus
+    for q in data.questions:
+        if q.answerable:
+            assert q.gold_answer in data.paragraphs[q.gold_pid].text
+
+
+def test_unanswerable_has_no_answer_sentence(corpus):
+    data, _ = corpus
+    for q in data.questions[:100]:
+        if not q.answerable:
+            subj = q.text.split(" of ")[1].rstrip(" ?")
+            attr = q.text.split("what is the ")[1].split(" of ")[0]
+            for p in data.paragraphs:
+                if p.subject == subj:
+                    assert f"the {attr} of" not in p.text
+
+
+def test_corpus_deterministic():
+    a = SyntheticSquad(n_paragraphs=50, n_questions=20, seed=7)
+    b = SyntheticSquad(n_paragraphs=50, n_questions=20, seed=7)
+    assert [p.text for p in a.paragraphs] == [p.text for p in b.paragraphs]
+    assert [q.text for q in a.questions] == [q.text for q in b.questions]
+
+
+# --- retrieval -------------------------------------------------------------
+
+
+def test_bm25_jnp_matches_numpy(corpus):
+    _, idx = corpus
+    q = "what is the length of river0001 ?"
+    qv = idx.query_vector(q)
+    s_np = idx.scores_np(qv)
+    s_j = np.asarray(idx.scores_batch(jnp.asarray(qv[None])))[0]
+    np.testing.assert_allclose(s_np, s_j, rtol=1e-5, atol=1e-5)
+
+
+def test_bm25_topk_sorted_and_consistent(corpus):
+    _, idx = corpus
+    ids, scores = idx.topk("what is the origin of empire0002 ?", 10)
+    assert len(ids) == 10
+    assert all(scores[i] >= scores[i + 1] for i in range(9))
+    full = idx.scores_np(idx.query_vector("what is the origin of empire0002 ?"))
+    assert scores[0] == pytest.approx(full.max())
+
+
+def test_bm25_retrieves_gold_more_than_chance(corpus):
+    data, idx = corpus
+    hits = n = 0
+    for q in data.questions:
+        if q.answerable:
+            ids, _ = idx.topk(q.text, 5)
+            texts = [idx.texts[i] for i in ids]
+            hits += any(q.gold_answer in t for t in texts)
+            n += 1
+    assert hits / n > 0.5, hits / n
+
+
+# --- tokenizer -------------------------------------------------------------
+
+
+def test_tokenizer_stable_and_bounded():
+    tok = HashTokenizer(1000)
+    ids = tok.encode("The Length of River0001 is VAL123 .")
+    assert ids == tok.encode("the length of river0001 is val123 .")
+    assert all(4 <= i < 1000 for i in ids)
+
+
+# --- optimizer -------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    from repro.training.optimizer import OptConfig, adamw_update
+    cfg = OptConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                    weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = {"m": {"w": jnp.zeros(2)}, "v": {"w": jnp.zeros(2)},
+           "step": jnp.zeros((), jnp.int32)}
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_lr_schedule_warmup_and_decay():
+    from repro.training.optimizer import OptConfig, lr_at
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] < lrs[1] <= cfg.lr + 1e-9
+    assert lrs[-1] == pytest.approx(cfg.lr * cfg.min_lr_frac, rel=1e-2)
+
+
+# --- checkpoint ------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.training.checkpoint import load_checkpoint, save_checkpoint
+    cfg = get_config("mamba2-130m", "smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path / "ck", 5, params)
+    step, loaded, _ = load_checkpoint(tmp_path / "ck", params)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- OPE -------------------------------------------------------------------
+
+
+def test_ope_estimators_recover_truth():
+    from repro.core.ope import estimator_suite
+    rng = np.random.default_rng(0)
+    n, d = 2000, 8
+    states = rng.standard_normal((n, d))
+    base = states @ rng.standard_normal((d, 5)) * 0.3
+    rewards = base + rng.standard_normal((n, 5)) * 0.1
+    target = rewards.argmax(axis=1)       # strong target policy
+    out = estimator_suite(rewards, states, target, seeds=10)
+    assert abs(out["snips"]["bias"]) < 0.1
+    assert out["dr"]["rmse"] <= out["ips"]["rmse"] * 1.5
+    assert abs(out["dr"]["bias"]) < 0.1
+
+
+# --- serving engine --------------------------------------------------------
+
+
+def test_engine_generates():
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import Engine
+    cfg = get_config("qwen1.5-32b", "smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params)
+    res = eng.generate([[5, 6, 7, 8], [9, 10, 11, 12]], max_new_tokens=4)
+    assert res.tokens.shape == (2, 4)
+    assert res.tokens.dtype == np.int32
+
+
+# --- sequence packing --------------------------------------------------------
+
+
+def test_packing_occupancy_and_masks():
+    from repro.data.packing import pack_documents
+    from repro.data.tokenizer import EOS, PAD
+    rng = np.random.default_rng(0)
+    docs = [list(rng.integers(10, 90, size=rng.integers(5, 60)))
+            for _ in range(200)]
+    batches = list(pack_documents(docs, seq_len=64, batch_size=4))
+    assert batches, "no batches produced"
+    occ = np.mean([b.occupancy for b in batches[:-1]])
+    assert occ > 0.99  # full rows except possibly the tail
+    for b in batches:
+        # labels never predict across document boundaries
+        cross = (b.segments[:, :-1] != b.segments[:, 1:]) & \
+                (b.labels[:, :-1] != -1)
+        assert not cross.any()
+        # labels equal next token where unmasked
+        m = b.labels[:, :-1] != -1
+        np.testing.assert_array_equal(b.labels[:, :-1][m],
+                                      b.tokens[:, 1:][m])
+
+
+def test_packing_vs_padding_flop_savings():
+    """Packing should beat naive one-doc-per-row padding occupancy."""
+    from repro.data.packing import pack_documents
+    from repro.data.tokenizer import PAD
+    rng = np.random.default_rng(1)
+    docs = [list(rng.integers(10, 90, size=rng.integers(5, 40)))
+            for _ in range(100)]
+    packed = list(pack_documents(docs, seq_len=64, batch_size=4))
+    occ_packed = np.mean([b.occupancy for b in packed])
+    occ_padded = np.mean([min(len(d) + 1, 64) / 64 for d in docs])
+    assert occ_packed > occ_padded + 0.2

@@ -1,0 +1,157 @@
+"""Integration: prefill/decode KV-cache path must agree with the full
+forward pass — the core serving-correctness invariant, checked per
+architecture family in float32.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+FAMILIES = ["command-r-35b", "gemma3-12b", "minicpm3-4b", "dbrx-132b",
+            "mamba2-130m", "jamba-1.5-large-398b", "qwen1.5-32b"]
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_consistency(arch):
+    cfg = _f32(get_config(arch, "smoke"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+
+    logits_full, _ = model.train_logits(params, {"tokens": toks})
+
+    cache = model.init_cache(B, T + 4)
+    t0 = 8
+    lg, cache = model.prefill(params, {"tokens": toks[:, :t0]}, cache)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, -1]), np.asarray(logits_full[:, t0 - 1]),
+        rtol=2e-3, atol=2e-3)
+    for t in range(t0, T):
+        lg, cache = model.decode(params, {"tokens": toks[:, t:t + 1]}, cache)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, -1]), np.asarray(logits_full[:, t]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch} decode step {t}")
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b"])
+def test_mla_absorb_equivalence(arch):
+    """Latent-space (absorbed) MLA decode == naive expansion decode."""
+    cfg = _f32(get_config(arch, "smoke"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    c1 = model.init_cache(B, T)
+    c2 = model.init_cache(B, T)
+    l1, c1 = model.prefill(params, {"tokens": toks[:, :8]}, c1,
+                           mla_absorb=False)
+    l2, c2 = model.prefill(params, {"tokens": toks[:, :8]}, c2,
+                           mla_absorb=True)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(8, T):
+        l1, c1 = model.decode(params, {"tokens": toks[:, t:t + 1]}, c1,
+                              mla_absorb=False)
+        l2, c2 = model.decode(params, {"tokens": toks[:, t:t + 1]}, c2,
+                              mla_absorb=True)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_masks_past():
+    """Gemma3 local layers must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(_f32(get_config("gemma3-12b", "smoke")),
+                              sliding_window=4, attn_pattern=("L",),
+                              n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    logits1, _ = model.train_logits(params, {"tokens": toks})
+    # perturb tokens far outside the window of the last position
+    toks2 = toks.at[:, :4].set((toks[:, :4] + 7) % cfg.vocab_size)
+    logits2, _ = model.train_logits(params, {"tokens": toks2})
+    # last position attends only to [T-window, T): embeddings of early
+    # tokens can't leak except through... nothing at 2 layers ≤ window*2
+    np.testing.assert_allclose(np.asarray(logits1[:, -1]),
+                               np.asarray(logits2[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_whisper_encdec_shapes():
+    cfg = _f32(get_config("whisper-large-v3", "smoke"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 10
+    inputs = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                     cfg.vocab_size),
+        "audio_emb": 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_seq_len, cfg.d_model)),
+    }
+    logits, _ = model.train_logits(params, inputs)
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    # decode uses cached cross-attention, no audio needed
+    cache = model.init_cache(B, T + 4)
+    lg, cache = model.prefill(params, inputs, cache)
+    lg2, cache = model.decode(
+        params, {"tokens": jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)},
+        cache)
+    assert np.all(np.isfinite(np.asarray(lg2, np.float32)))
+
+
+def test_mtp_loss_included():
+    import dataclasses as dc
+    from repro.models.transformer import forward_train_loss
+    cfg = _f32(get_config("deepseek-v3-671b", "smoke"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    l_mtp = forward_train_loss(params, cfg, batch)
+    l_no = forward_train_loss(params, dc.replace(cfg, mtp_depth=0), batch)
+    assert float(l_mtp) != pytest.approx(float(l_no))
+    assert np.isfinite(float(l_mtp))
+
+
+def test_window_ring_cache_equivalence():
+    """Ring-buffer window cache decode == full-cache decode (gemma3)."""
+    cfg = dataclasses.replace(_f32(get_config("gemma3-12b", "smoke")),
+                              sliding_window=8)
+    cfg_ring = dataclasses.replace(cfg, window_ring_cache=True)
+    m_full = build_model(cfg)
+    m_ring = build_model(cfg_ring)
+    params = m_full.init(jax.random.PRNGKey(0))
+    B, T = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    cf = m_full.init_cache(B, T)
+    cr = m_ring.init_cache(B, T)
+    # ring cache for local layers must be window-sized
+    assert cr["blocks"]["p0"]["k"].shape[2] == 8  # (nblk, B, W, Hkv, Dh)
+    lf, cf = m_full.prefill(params, {"tokens": toks[:, :12]}, cf)
+    lr, cr = m_ring.prefill(params, {"tokens": toks[:, :12]}, cr)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(12, T):
+        lf, cf = m_full.decode(params, {"tokens": toks[:, t:t + 1]}, cf)
+        lr, cr = m_ring.decode(params, {"tokens": toks[:, t:t + 1]}, cr)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"ring mismatch at t={t}")
