@@ -3,29 +3,28 @@ including generalization to an UNSEEN interpolated profile."""
 import numpy as np
 
 from benchmarks.common import canonical_results, save_artifact
-from repro.core.actions import SLO_PROFILES
-from repro.core.conditioned import (conditioned_actions, interpolate,
-                                    train_conditioned)
+from repro.core.conditioned import interpolate
 from repro.core.metrics import best_fixed_action, evaluate_actions
-from repro.core.policy import policy_actions, train_policy
+from repro.routing import (ConditionedPolicy, MLPPolicy, get_slo_profile,
+                           list_slo_profiles)
 
 
 def main() -> dict:
     cfg, _, _, (train_log, eval_log) = canonical_results()
-    profiles = [SLO_PROFILES["quality_first"], SLO_PROFILES["cheap"]]
-    result, ccfg = train_conditioned(train_log, profiles, cfg.router)
+    profiles = [get_slo_profile("quality_first"), get_slo_profile("cheap")]
+    cond = ConditionedPolicy.train(train_log, profiles, cfg.router)
 
     rows = []
     for p in profiles + [interpolate(profiles[0], profiles[1], 0.5)]:
-        acts_c = conditioned_actions(result, ccfg, eval_log, p)
+        acts_c = cond.route(eval_log.states, p).actions
         rep_c = evaluate_actions(eval_log, acts_c, p, f"conditioned@{p.name}")
         rows.append(rep_c.row())
         # per-profile specialist for comparison (seen profiles only)
-        if p.name in SLO_PROFILES:
-            tr = train_policy(train_log, train_log.rewards(p), cfg.router,
-                              objective="argmax_ce")
-            acts_s = policy_actions(tr.params, eval_log.states, cfg.router)
-            rows.append(evaluate_actions(eval_log, acts_s, p,
+        if p.name in list_slo_profiles():
+            spec = MLPPolicy.train(train_log, train_log.rewards(p),
+                                   cfg.router, objective="argmax_ce")
+            rows.append(evaluate_actions(eval_log,
+                                         spec.actions(eval_log.states), p,
                                          f"specialist@{p.name}").row())
         _, bf = best_fixed_action(eval_log, p)
         rows.append({**bf.row(), "method": f"best-fixed@{p.name}"})

@@ -6,9 +6,11 @@ testbed — the full grid behind the paper's "objective choice strongly
 shapes learned behavior" conclusion.
 """
 from benchmarks.common import canonical_results, save_artifact
-from repro.core.actions import SLO_PROFILES
 from repro.core.metrics import best_fixed_action, evaluate_actions
-from repro.core.policy import policy_actions, train_policy
+from repro.routing import MLPPolicy
+# live registry view, iterated in registration order so artifact rows
+# keep the seed ordering (quality_first before cheap)
+from repro.routing.registry import SLO_PROFILES
 
 OBJECTIVES = ("argmax_ce", "argmax_ce_wt", "soft_reward", "constrained")
 
@@ -21,10 +23,10 @@ def main() -> dict:
         _, bf = best_fixed_action(eval_log, profile)
         rows.append({"slo": slo, **bf.row()})
         for obj in OBJECTIVES:
-            tr = train_policy(train_log, rewards, cfg.router, objective=obj,
-                              refusal_cap=0.45)
-            acts = policy_actions(tr.params, eval_log.states, cfg.router)
-            rep = evaluate_actions(eval_log, acts, profile, obj)
+            policy = MLPPolicy.train(train_log, rewards, cfg.router,
+                                     objective=obj, refusal_cap=0.45)
+            rep = evaluate_actions(eval_log, policy.actions(eval_log.states),
+                                   profile, obj)
             rows.append({"slo": slo, **rep.row()})
     save_artifact("objectives_ablation", rows)
     print(f"{'slo':>14s} {'objective':>16s} {'acc':>6s} {'cost':>8s} "

@@ -6,23 +6,22 @@ collapse onset the paper observes only at the endpoints."""
 import numpy as np
 
 from benchmarks.common import bar, canonical_results, save_artifact
-from repro.core.actions import SLO_PROFILES
 from repro.core.conditioned import interpolate
 from repro.core.metrics import evaluate_actions
-from repro.core.policy import policy_actions, train_policy
+from repro.routing import MLPPolicy, get_slo_profile
 
 TS = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0]
 
 
 def main() -> dict:
     cfg, _, _, (train_log, eval_log) = canonical_results()
-    a, b = SLO_PROFILES["quality_first"], SLO_PROFILES["cheap"]
+    a, b = get_slo_profile("quality_first"), get_slo_profile("cheap")
     rows = []
     for t in TS:
         p = interpolate(a, b, t)
-        tr = train_policy(train_log, train_log.rewards(p), cfg.router,
-                          objective="argmax_ce")
-        acts = policy_actions(tr.params, eval_log.states, cfg.router)
+        policy = MLPPolicy.train(train_log, train_log.rewards(p), cfg.router,
+                                 objective="argmax_ce")
+        acts = policy.actions(eval_log.states)
         rep = evaluate_actions(eval_log, acts, p, f"t={t}")
         rows.append({"t": t, "refusal": rep.refusal_rate, "acc": rep.acc,
                      "reward": rep.reward, "cost": rep.cost,

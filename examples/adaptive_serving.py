@@ -1,39 +1,39 @@
-"""Adaptive SLO serving: scheduler + SRE error budgets (beyond paper).
+"""Adaptive SLO serving: the Gateway + SRE error budgets (beyond paper).
 
 Serves a stream of requests under the collapse-prone cheap SLO with a
 routing policy trained by vanilla Argmax-CE.  Without back-pressure the
 policy refuses ~80% of requests; the error-budget tracker detects the
 wrong-refusal burn and tightens the refusal share per batch — collapse
-mitigation applied at SERVING time, no retraining.
+mitigation applied at SERVING time through the unified Gateway, no
+retraining.
 
     PYTHONPATH=src python examples/adaptive_serving.py
 """
-from repro.core.actions import SLO_PROFILES
 from repro.core.config import RouterConfig, TestbedConfig
 from repro.core.offline_log import build_testbed
-from repro.core.policy import train_policy
-from repro.serving.scheduler import Request, Scheduler
+from repro.routing import (Gateway, MLPPolicy, Request, SimulatorBackend,
+                           get_slo_profile)
 
 
 def main():
     cfg = TestbedConfig(n_train=300, n_eval=100, n_paragraphs=300,
                         router=RouterConfig(n_epochs=15))
     data, index, pipe, train_log, _ = build_testbed(cfg)
-    tr = train_policy(train_log, train_log.rewards(SLO_PROFILES["cheap"]),
-                      cfg.router, objective="argmax_ce")
+    policy = MLPPolicy.train(
+        train_log, train_log.rewards(get_slo_profile("cheap")),
+        cfg.router, objective="argmax_ce")
     reqs = [Request(qid=q.qid, question=q, slo="cheap")
             for q in data.questions[-100:]]
 
     for adaptive in (False, True):
-        sched = Scheduler(pipe, tr.params, cfg.router, max_batch=20,
-                          adaptive_refusal=adaptive,
-                          base_refusal_share=0.5)
-        sched.submit(list(reqs))
-        stats = sched.drain()
-        ref = stats.action_counts.get(4, 0) / stats.served
+        gw = Gateway(policy, SimulatorBackend(pipe),
+                     router_cfg=cfg.router, index=index, max_batch=20,
+                     adaptive_refusal=adaptive, base_refusal_share=0.5)
+        stats = gw.serve(list(reqs))
         print(f"adaptive={str(adaptive):5s} served={stats.served} "
-              f"refusal_share={ref:.2f} avg_reward={stats.avg_reward:+.4f}")
-        for name, rep in sched.budget.report().items():
+              f"refusal_share={gw.refusal_share:.2f} "
+              f"avg_reward={stats.avg_reward:+.4f}")
+        for name, rep in gw.budget.report().items():
             print(f"    budget {name:13s} violation={rep['violation_rate']:.3f}"
                   f" consumed={rep['budget_consumed']:5.2f}"
                   f" healthy={rep['healthy']}")

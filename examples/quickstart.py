@@ -1,19 +1,26 @@
 """Quickstart: the paper in miniature (~1 minute on CPU).
 
 Builds a small synthetic SQuAD-2.0 testbed, generates the offline
-action-sweep log, trains Argmax-CE under both SLO profiles, and prints
-the cost/quality table — including the refusal-collapse failure mode.
+action-sweep log, trains Argmax-CE under both SLO profiles, prints the
+cost/quality table — including the refusal-collapse failure mode — and
+then serves live traffic through the unified routing API:
+
+    policy  = MLPPolicy.train(...)          # any RoutingPolicy
+    gateway = Gateway(policy, SimulatorBackend(pipe), ...)
+    stats   = gateway.serve(requests)       # route -> execute -> account
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core.config import RouterConfig, TestbedConfig
 from repro.core.experiment import run_experiment
+from repro.routing import (Gateway, MLPPolicy, Request, SimulatorBackend,
+                           get_slo_profile)
 
 
 def main():
     cfg = TestbedConfig(n_train=300, n_eval=100, n_paragraphs=300,
                         router=RouterConfig(n_epochs=15))
-    res, extras, _ = run_experiment(cfg, verbose=True)
+    res, extras, (train_log, eval_log) = run_experiment(cfg, verbose=True)
     print("\nAction distributions (Fig 1):")
     for k, d in extras["action_dists"].items():
         print(f"  {k:28s} {[round(x, 2) for x in d]}")
@@ -21,6 +28,21 @@ def main():
                 if r["slo"] == "cheap" and r["method"] == "argmax_ce"][0]
     print(f"\nRefusal collapse under cheap SLO: refusal_rate="
           f"{ce_cheap['refuse']:.2f}, acc={ce_cheap['acc']:.2f}")
+
+    # --- live serving through the Gateway (the production entry point) ---
+    data, index, pipe = extras["testbed"]
+    policy = MLPPolicy.train(
+        train_log, train_log.rewards(get_slo_profile("cheap")),
+        cfg.router, objective="argmax_ce")
+    gateway = Gateway(policy, SimulatorBackend(pipe),
+                      router_cfg=cfg.router, index=index, max_batch=20,
+                      adaptive_refusal=True, base_refusal_share=0.5)
+    stats = gateway.serve([Request(qid=q.qid, question=q, slo="cheap")
+                           for q in data.questions[-60:]])
+    print(f"\nGateway served {stats.served} requests under cheap SLO: "
+          f"avg reward {stats.avg_reward:+.4f}, "
+          f"refusal share {gateway.refusal_share:.2f} "
+          f"(budget back-pressure capped the collapse)")
 
 
 if __name__ == "__main__":

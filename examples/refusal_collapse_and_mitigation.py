@@ -1,37 +1,35 @@
 """Failure-mode demo (paper §6.2/§7.1): refusal collapse under the cheap
-SLO and the Lagrangian refusal-cap mitigation.
+SLO and the Lagrangian refusal-cap mitigation, through the routing API.
 
     PYTHONPATH=src python examples/refusal_collapse_and_mitigation.py
 """
-import numpy as np
-
-from repro.core.actions import SLO_PROFILES, REFUSE_ACTION
 from repro.core.config import RouterConfig, TestbedConfig
 from repro.core.metrics import best_fixed_action, evaluate_actions
 from repro.core.offline_log import build_testbed
-from repro.core.policy import policy_actions, train_policy
+from repro.routing import ConstrainedPolicy, MLPPolicy, get_slo_profile
 
 
 def main():
     cfg = TestbedConfig(n_train=400, n_eval=150, n_paragraphs=300,
                         router=RouterConfig(n_epochs=20))
     _, _, _, train_log, eval_log = build_testbed(cfg)
-    profile = SLO_PROFILES["cheap"]
+    profile = get_slo_profile("cheap")
     rewards = train_log.rewards(profile)
 
     print("== cheap SLO: vanilla Argmax-CE (collapses) ==")
-    tr = train_policy(train_log, rewards, cfg.router, objective="argmax_ce")
-    acts = policy_actions(tr.params, eval_log.states, cfg.router)
-    rep = evaluate_actions(eval_log, acts, profile, "argmax_ce")
+    policy = MLPPolicy.train(train_log, rewards, cfg.router,
+                             objective="argmax_ce")
+    rep = evaluate_actions(eval_log, policy.actions(eval_log.states),
+                           profile, "argmax_ce")
     print(rep.row())
 
     print("\n== mitigation: Lagrangian refusal cap (0.45) ==")
-    trc = train_policy(train_log, rewards, cfg.router,
-                       objective="constrained", refusal_cap=0.45)
-    actsc = policy_actions(trc.params, eval_log.states, cfg.router)
-    repc = evaluate_actions(eval_log, actsc, profile, "constrained")
+    con = ConstrainedPolicy.train(train_log, rewards, cfg.router,
+                                  refusal_cap=0.45)
+    repc = evaluate_actions(eval_log, con.actions(eval_log.states),
+                            profile, "constrained")
     print(repc.row())
-    print(f"final lambda = {trc.lagrange:.3f}")
+    print(f"final lambda = {con.lagrange:.3f}")
 
     _, bf = best_fixed_action(eval_log, profile)
     print(f"\nbest fixed action reward: {bf.reward:+.4f}")

@@ -1,15 +1,17 @@
 """End-to-end serving driver: batched requests through the full stack.
 
- request batch -> SLO router (trained Argmax-CE policy)
-               -> BM25 retrieval at the routed depth
+ request batch -> Gateway (unified routing API)
+               -> RoutingPolicy (trained Argmax-CE MLP)
+               -> action-bucketed BM25 retrieval at the routed depth
                -> a REAL JAX transformer backend (reduced qwen family)
                   generating answers token-by-token through the KV-cache
-                  engine (prefill + decode)
-               -> per-SLO metrics.
+                  engine (prefill + decode), one batched call per bucket
+               -> per-SLO reward + error-budget accounting.
 
 The generation quality of the tiny local model is irrelevant — the point
 is the full serving path: routing, retrieval, batched prefill/decode,
-cost accounting.
+cost accounting, all through the one `repro.routing.Gateway` entry
+point (no hand-rolled route→retrieve→generate loop).
 
     PYTHONPATH=src python examples/serve_rag_slo.py --slo cheap
 """
@@ -17,33 +19,31 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
-from repro.core.actions import ACTIONS, SLO_PROFILES, reward
+from repro.configs import get_config
 from repro.core.config import TestbedConfig
 from repro.core.offline_log import build_testbed
-from repro.core.policy import policy_actions, train_policy
-from repro.configs import get_config
 from repro.data.tokenizer import HashTokenizer
-from repro.generation.prompts import build_prompt
 from repro.models import build_model
+from repro.routing import (EngineBackend, Gateway, MLPPolicy, Request,
+                           get_slo_profile, list_slo_profiles)
 from repro.serving.engine import Engine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--slo", default="quality_first",
-                    choices=list(SLO_PROFILES))
+                    choices=list_slo_profiles())
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     args = ap.parse_args()
-    profile = SLO_PROFILES[args.slo]
+    profile = get_slo_profile(args.slo)
 
     print("# building testbed + routing policy ...")
     cfg = TestbedConfig(n_train=300, n_eval=100, n_paragraphs=200)
     data, index, pipe, train_log, eval_log = build_testbed(cfg)
-    tr = train_policy(train_log, train_log.rewards(profile), cfg.router,
-                      objective="argmax_ce")
+    policy = MLPPolicy.train(train_log, train_log.rewards(profile),
+                             cfg.router, objective="argmax_ce")
 
     print("# loading local JAX generation backend (reduced qwen family)")
     mcfg = get_config("qwen1.5-32b", "smoke")
@@ -52,45 +52,28 @@ def main():
     engine = Engine(model, params, max_len=512)
     tok = HashTokenizer(mcfg.vocab_size)
 
-    queries = data.questions[-args.batch:]
-    states = eval_log.states[-args.batch:]
-    routed = policy_actions(tr.params, states, cfg.router)
+    def report(req, action, out, rew):
+        status = "REFUSED(pre)" if out.refused else out.answer
+        print(f"  a{action.idx} (k={action.k:2d},{action.mode:7s}) "
+              f"cost={out.cost_tokens:6.0f}  {status:22s} "
+              f"q: {req.question.text[:44]}")
 
+    gateway = Gateway(
+        policy,
+        EngineBackend(engine, tok, index,
+                      max_new_tokens=args.max_new_tokens),
+        router_cfg=cfg.router, index=index, max_batch=args.batch,
+        adaptive_refusal=False, on_outcome=report)
+
+    reqs = [Request(qid=q.qid, question=q, slo=args.slo)
+            for q in data.questions[-args.batch:]]
     print(f"# serving {args.batch} requests under SLO={args.slo}\n")
     t0 = time.time()
-    prompts, metas = [], []
-    for q, a in zip(queries, routed):
-        action = ACTIONS[a]
-        if action.mode == "refuse":
-            metas.append((q, action, None))
-            continue
-        passages = pipe.retrieve(q.text, action.k)
-        prompt = build_prompt(action.mode, q.text, passages)
-        prompts.append(tok.encode(prompt, bos=True, max_len=384))
-        metas.append((q, action, len(prompts) - 1))
-
-    result = engine.generate(prompts, max_new_tokens=args.max_new_tokens) \
-        if prompts else None
+    stats = gateway.serve(reqs)
     dt = time.time() - t0
 
-    total_reward = 0.0
-    for q, action, slot in metas:
-        if slot is None:
-            cost, status = 5, "REFUSED(pre)"
-            r = reward(profile, correct=False, cost_tokens=cost,
-                       hallucinated=False, refused=True,
-                       answerable=q.answerable, pre_retrieval=True)
-        else:
-            cost = len(prompts[slot]) + result.tokens.shape[1]
-            status = f"generated {result.tokens.shape[1]} toks"
-            r = reward(profile, correct=False, cost_tokens=cost,
-                       hallucinated=not q.answerable, refused=False,
-                       answerable=q.answerable)
-        total_reward += r
-        print(f"  a{action.idx} (k={action.k:2d},{action.mode:7s}) "
-              f"cost={cost:4d}  {status:18s}  q: {q.text[:44]}")
     print(f"\nbatch served in {dt:.1f}s; avg SLO reward "
-          f"{total_reward / args.batch:+.4f}")
+          f"{stats.avg_reward:+.4f}; actions {dict(stats.action_counts)}")
 
 
 if __name__ == "__main__":

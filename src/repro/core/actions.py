@@ -1,42 +1,33 @@
-"""The paper's action space and SLO profiles (§3.1, §3.2)."""
+"""The paper's action space and SLO profiles (§3.1, §3.2).
+
+Since the Unified Router API, the action space and the SLO profiles
+live in the ``repro.routing`` registry (``repro/routing/registry.py``);
+this module re-exports the paper defaults so every existing import
+keeps working:
+
+* ``ACTIONS`` / ``N_ACTIONS`` / ``REFUSE_ACTION`` — the registered
+  ``"paper5"`` action space;
+* ``SLO_PROFILES`` — the LIVE profile registry dict (profiles
+  registered through ``repro.routing.register_slo_profile`` appear
+  here too);
+* ``reward`` — eq. (1), unchanged.
+
+New code should prefer ``repro.routing.get_action_space()`` /
+``get_slo_profile()``.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict
-
 from repro.core.config import SLOProfile
+from repro.routing.registry import (Action, ActionSpace,  # noqa: F401
+                                    PAPER_ACTION_SPACE, SLO_PROFILES,
+                                    get_action_space, get_slo_profile,
+                                    register_slo_profile)
 
-
-@dataclass(frozen=True)
-class Action:
-    idx: int
-    k: int            # retrieval depth (0 = no retrieval)
-    mode: str         # guarded | auto | refuse
-
-
-# Action 0..4 exactly as in the paper §3.1.
-ACTIONS = (
-    Action(0, 2, "guarded"),
-    Action(1, 5, "guarded"),
-    Action(2, 10, "guarded"),
-    Action(3, 5, "auto"),
-    Action(4, 0, "refuse"),
-)
-N_ACTIONS = len(ACTIONS)
-REFUSE_ACTION = 4
-
-
-# SLO profiles (§3.2): quality_first weighs correctness / hallucination
-# avoidance; cheap weighs token cost and rewards refusal heavily — the
-# configuration under which the paper observes refusal collapse.
-SLO_PROFILES: Dict[str, SLOProfile] = {
-    "quality_first": SLOProfile(
-        name="quality_first",
-        w_acc=1.0, w_cost=0.1, w_hall=0.25, w_ref=0.1, w_ref_wrong=0.15),
-    "cheap": SLOProfile(
-        name="cheap",
-        w_acc=0.3, w_cost=0.8, w_hall=0.3, w_ref=0.35, w_ref_wrong=1.0),
-}
+# Action 0..4 exactly as in the paper §3.1, via the default registry
+# entry — paper numbers reproduce bit-for-bit through the registry.
+ACTIONS = PAPER_ACTION_SPACE.actions
+N_ACTIONS = PAPER_ACTION_SPACE.n_actions
+REFUSE_ACTION = PAPER_ACTION_SPACE.refuse_action
 
 
 def reward(profile: SLOProfile, *, correct: bool, cost_tokens: float,

@@ -5,6 +5,11 @@ vector is appended to the state so ONE router serves every profile —
 including interpolated profiles never seen at training time (the Pareto
 sweep benchmark).  This is the natural production deployment: the SLO is
 a request header, not a model version.
+
+Serving-side access goes through the
+:class:`repro.routing.policy.ConditionedPolicy` adapter, which wraps
+``train_conditioned`` and appends the profile vector per request inside
+``route``.
 """
 from __future__ import annotations
 

@@ -270,6 +270,9 @@ class RetrievalConfig:
 class TestbedConfig:
     """End-to-end paper testbed: corpus + retrieval + generator + router."""
 
+    # not a pytest test class, despite the name (silences collection warning)
+    __test__ = False
+
     n_train: int = 800
     n_eval: int = 200               # paper: N=200 dev examples
     n_paragraphs: int = 600

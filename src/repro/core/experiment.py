@@ -18,7 +18,7 @@ from repro.core.config import RouterConfig, TestbedConfig
 from repro.core.metrics import (PolicyReport, best_fixed_action,
                                 evaluate_actions, fixed_action_report)
 from repro.core.offline_log import OfflineLog, build_testbed
-from repro.core.policy import policy_actions, train_policy
+from repro.routing.policy import MLPPolicy
 
 
 @dataclass
@@ -48,7 +48,8 @@ def run_experiment(cfg: Optional[TestbedConfig] = None,
     cfg = cfg or TestbedConfig()
     data, index, pipe, train_log, eval_log = build_testbed(cfg)
     res = ExperimentResult()
-    extras: Dict[str, dict] = {"train_hist": {}, "action_dists": {}}
+    extras: Dict[str, dict] = {"train_hist": {}, "action_dists": {},
+                               "testbed": (data, index, pipe)}
 
     for slo_name, profile in SLO_PROFILES.items():
         # fixed baselines (paper §5.3)
@@ -62,12 +63,13 @@ def run_experiment(cfg: Optional[TestbedConfig] = None,
         if include_mitigation:
             objs.append("constrained")
         for obj in objs:
-            tr = train_policy(train_log, train_rewards, cfg.router,
-                              objective=obj, refusal_cap=refusal_cap)
-            acts = policy_actions(tr.params, eval_log.states, cfg.router)
+            policy = MLPPolicy.train(train_log, train_rewards, cfg.router,
+                                     objective=obj, refusal_cap=refusal_cap)
+            acts = policy.actions(eval_log.states)
             rep = evaluate_actions(eval_log, acts, profile, obj)
             res.add(slo_name, rep)
-            extras["train_hist"][f"{slo_name}/{obj}"] = tr.history[-1]
+            extras["train_hist"][f"{slo_name}/{obj}"] = \
+                policy.train_result.history[-1]
             extras["action_dists"][f"{slo_name}/{obj}"] = \
                 [float(x) for x in rep.action_dist]
         if verbose:

@@ -1,8 +1,9 @@
-"""Serving driver: the full SLO-routed RAG service loop.
+"""Serving driver: the full SLO-routed RAG service loop via the Gateway.
 
-Builds the paper testbed (corpus, BM25 index, simulator backend), loads
-or trains a routing policy, then serves a batch of queries end-to-end:
-route -> retrieve -> generate -> report per-SLO metrics.
+Builds the paper testbed (corpus, BM25 index, simulator backend),
+trains a routing policy, then serves queries end-to-end through the
+unified routing API: Gateway -> RoutingPolicy.route -> action-bucketed
+retrieval/generation -> reward + error-budget accounting.
 
     PYTHONPATH=src python -m repro.launch.serve --slo quality_first -n 50
 """
@@ -13,40 +14,63 @@ import json
 
 import numpy as np
 
-from repro.core.actions import ACTIONS, SLO_PROFILES
 from repro.core.config import TestbedConfig
-from repro.core.experiment import run_experiment
 from repro.core.metrics import evaluate_actions
 from repro.core.offline_log import build_testbed
-from repro.core.policy import policy_actions, train_policy
+from repro.routing import (ConstrainedPolicy, Gateway, MLPPolicy, Request,
+                           SimulatorBackend, get_slo_profile,
+                           list_slo_profiles)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--slo", default="quality_first",
-                    choices=list(SLO_PROFILES))
+                    choices=list_slo_profiles())
     ap.add_argument("--objective", default="argmax_ce")
     ap.add_argument("-n", type=int, default=50)
     ap.add_argument("--refusal-cap", type=float, default=1.0)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="enable budget-driven refusal back-pressure")
     args = ap.parse_args()
 
     cfg = TestbedConfig()
-    profile = SLO_PROFILES[args.slo]
+    profile = get_slo_profile(args.slo)
     data, index, pipe, train_log, eval_log = build_testbed(cfg)
-    tr = train_policy(train_log, train_log.rewards(profile), cfg.router,
-                      objective=args.objective, refusal_cap=args.refusal_cap)
+    if args.objective == "constrained":
+        policy = ConstrainedPolicy.train(train_log, train_log.rewards(profile),
+                                         cfg.router,
+                                         refusal_cap=args.refusal_cap)
+    else:
+        policy = MLPPolicy.train(train_log, train_log.rewards(profile),
+                                 cfg.router, objective=args.objective,
+                                 refusal_cap=args.refusal_cap)
 
-    # serve the first n eval queries
+    shown = [0]
+
+    def report(req, action, out, rew):
+        if shown[0] < 10:
+            shown[0] += 1
+            status = ("REFUSED" if out.refused
+                      else ("OK" if out.correct else "WRONG"))
+            print(f"q={req.question.text[:48]:50s} -> a{action.idx} "
+                  f"(k={action.k},{action.mode:7s}) "
+                  f"cost={out.cost_tokens:6.0f} {status}")
+
+    gateway = Gateway(policy, SimulatorBackend(pipe), router_cfg=cfg.router,
+                      index=index, max_batch=16,
+                      adaptive_refusal=args.adaptive, on_outcome=report)
+
     eval_q = data.questions[-cfg.n_eval:][: args.n]
-    acts = policy_actions(tr.params, eval_log.states[: args.n], cfg.router)
     print(f"# serving {args.n} queries under SLO={args.slo} "
           f"objective={args.objective}")
-    for q, a in zip(eval_q[:10], acts[:10]):
-        action = ACTIONS[a]
-        out = pipe.execute(q, action)
-        print(f"q={q.text[:48]:50s} -> a{a} (k={action.k},{action.mode:7s}) "
-              f"cost={out.cost_tokens:6.0f} "
-              f"{'REFUSED' if out.refused else ('OK' if out.correct else 'WRONG')}")
+    stats = gateway.serve([Request(qid=q.qid, question=q, slo=args.slo)
+                           for q in eval_q])
+    print(f"# served={stats.served} avg_reward={stats.avg_reward:+.4f} "
+          f"actions={dict(sorted(stats.action_counts.items()))}")
+    print("# error budgets:", json.dumps(gateway.budget.report(), indent=1))
+
+    # offline metrics on the logged sweep for the same routed states
+    acts = policy.route(eval_log.states[: args.n], args.slo).actions
     rep = evaluate_actions(eval_log.subset(np.arange(args.n)), acts, profile,
                            args.objective)
     print(json.dumps(rep.row(), indent=1))

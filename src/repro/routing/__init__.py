@@ -1,0 +1,60 @@
+"""Unified Router API: pluggable policies, action-space registry, and
+the serving Gateway.
+
+    from repro.routing import (Gateway, Request, MLPPolicy, FixedPolicy,
+                               get_action_space, get_slo_profile)
+
+Registry symbols import eagerly (they are dependency-light and
+``repro.core.actions`` re-exports them); policy/gateway/backend symbols
+load lazily via module ``__getattr__`` so that importing
+``repro.core.actions`` — which pulls ``repro.routing.registry`` — never
+drags in the policy/serving stack mid-import.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.routing.registry import (Action, ActionSpace, DEFAULT_SPACE,
+                                    PAPER_ACTION_SPACE, get_action_space,
+                                    get_slo_profile, list_action_spaces,
+                                    list_slo_profiles, register_action_space,
+                                    register_slo_profile,
+                                    slo_profile_from_config)
+
+_LAZY = {
+    # policy layer
+    "RoutingPolicy": "repro.routing.policy",
+    "RoutingDecision": "repro.routing.policy",
+    "RoutingContext": "repro.routing.policy",
+    "FixedPolicy": "repro.routing.policy",
+    "MLPPolicy": "repro.routing.policy",
+    "ConstrainedPolicy": "repro.routing.policy",
+    "ConditionedPolicy": "repro.routing.policy",
+    "apply_refusal_cap": "repro.routing.policy",
+    # backends
+    "GenerationBackend": "repro.routing.backends",
+    "SimulatorBackend": "repro.routing.backends",
+    "as_backend": "repro.routing.backends",
+    "EngineBackend": "repro.routing.engine_backend",
+    # gateway
+    "Gateway": "repro.routing.gateway",
+    "GatewayStats": "repro.routing.gateway",
+    "Request": "repro.routing.gateway",
+}
+
+__all__ = ["Action", "ActionSpace", "DEFAULT_SPACE", "PAPER_ACTION_SPACE",
+           "get_action_space", "get_slo_profile", "list_action_spaces",
+           "list_slo_profiles", "register_action_space",
+           "register_slo_profile", "slo_profile_from_config",
+           *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,46 @@
+"""Generation backends behind one protocol.
+
+The Gateway executes a routed action bucket through a
+:class:`GenerationBackend`; the simulator pipeline and the real JAX
+KV-cache engine are interchangeable behind ``execute_batch``.  The
+heavy JAX backend lives in ``engine_backend.py`` so the simulator path
+stays import-light.
+"""
+from __future__ import annotations
+
+from typing import List, Protocol, Sequence, runtime_checkable
+
+from repro.data.synthetic_squad import Question
+from repro.routing.registry import Action
+from repro.serving.pipeline import ActionOutcome, RAGPipeline
+
+
+@runtime_checkable
+class GenerationBackend(Protocol):
+    """Executes one action for a bucket of requests."""
+
+    def execute_batch(self, questions: Sequence[Question],
+                      action: Action) -> List[ActionOutcome]:
+        ...
+
+
+class SimulatorBackend:
+    """The calibrated simulator pipeline as a generation backend."""
+
+    def __init__(self, pipeline: RAGPipeline):
+        self.pipeline = pipeline
+
+    @property
+    def index(self):
+        return self.pipeline.index
+
+    def execute_batch(self, questions: Sequence[Question],
+                      action: Action) -> List[ActionOutcome]:
+        return [self.pipeline.execute(q, action) for q in questions]
+
+
+def as_backend(backend_or_pipeline) -> GenerationBackend:
+    """Accept either a backend or a raw :class:`RAGPipeline`."""
+    if isinstance(backend_or_pipeline, RAGPipeline):
+        return SimulatorBackend(backend_or_pipeline)
+    return backend_or_pipeline

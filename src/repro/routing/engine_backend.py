@@ -1,0 +1,72 @@
+"""Real-model generation backend: BM25 retrieval + the JAX KV-cache
+:class:`~repro.serving.engine.Engine` behind the
+:class:`~repro.routing.backends.GenerationBackend` protocol.
+
+Replaces the hand-rolled route→retrieve→prefill/decode loop that used
+to live in ``examples/serve_rag_slo.py``: the Gateway buckets requests
+by routed action, and each non-refuse bucket becomes ONE batched
+prefill+decode call.  The tiny local model has no answer scorer, so
+outcomes carry token-accounting truth (cost, refusal) and conservative
+quality indicators (``correct=False``; unanswerable queries that get an
+answer anyway count as hallucinations), exactly as the old driver did.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.data.synthetic_squad import Question
+from repro.data.tokenizer import HashTokenizer
+from repro.generation.prompts import REFUSAL_TEXT, build_prompt
+from repro.retrieval.bm25 import BM25Index
+from repro.routing.registry import Action
+from repro.serving.engine import Engine
+from repro.serving.pipeline import ActionOutcome
+
+# Matches the pre-retrieval refusal accounting of the old serve driver.
+REFUSE_COST_TOKENS = 5.0
+
+
+class EngineBackend:
+    """Batched retrieval + real JAX generation for one action bucket."""
+
+    def __init__(self, engine: Engine, tokenizer: HashTokenizer,
+                 index: BM25Index, *, max_prompt_len: int = 384,
+                 max_new_tokens: int = 8):
+        self.engine = engine
+        self.tok = tokenizer
+        self.index = index
+        self.max_prompt_len = max_prompt_len
+        self.max_new_tokens = max_new_tokens
+
+    def _retrieve(self, question: str, k: int) -> List[str]:
+        if k <= 0:
+            return []
+        idx, _ = self.index.topk(question, k)
+        return [self.index.texts[i] for i in idx]
+
+    def execute_batch(self, questions: Sequence[Question],
+                      action: Action) -> List[ActionOutcome]:
+        if action.mode == "refuse":
+            return [ActionOutcome(
+                qid=q.qid, action=action.idx, correct=False, refused=True,
+                hallucinated=False, cost_tokens=REFUSE_COST_TOKENS,
+                hit=False, answerable=q.answerable, answer=REFUSAL_TEXT)
+                for q in questions]
+
+        prompts, hits = [], []
+        for q in questions:
+            passages = self._retrieve(q.text, action.k)
+            hits.append(bool(q.gold_answer) and any(
+                q.gold_answer in p for p in passages))
+            prompt = build_prompt(action.mode, q.text, passages)
+            prompts.append(self.tok.encode(prompt, bos=True,
+                                           max_len=self.max_prompt_len))
+        result = self.engine.generate(prompts,
+                                      max_new_tokens=self.max_new_tokens)
+        n_out = result.tokens.shape[1]
+        return [ActionOutcome(
+            qid=q.qid, action=action.idx, correct=False, refused=False,
+            hallucinated=not q.answerable,
+            cost_tokens=float(len(prompts[i]) + n_out), hit=hits[i],
+            answerable=q.answerable, answer=f"<{n_out} generated tokens>")
+            for i, q in enumerate(questions)]

@@ -1,0 +1,170 @@
+"""The serving Gateway: one entry point for SLO-routed RAG serving.
+
+  submit -> micro-batch -> RoutingPolicy.route (per-request SLO,
+  budget-derived refusal cap) -> action-bucketed batched execution on a
+  GenerationBackend (simulator pipeline or real JAX engine) -> reward +
+  error-budget accounting.
+
+This facade subsumes the old ``Scheduler`` (now a thin wrapper kept for
+backward compatibility) and the hand-rolled serve loop that used to
+live in ``examples/serve_rag_slo.py``.  Anything that implements
+:class:`~repro.routing.policy.RoutingPolicy` plugs in — fixed
+baselines, trained MLPs, the Lagrangian-constrained variant, the
+SLO-conditioned single policy — and sharded/async serving work lands
+here rather than in N copies of the loop.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.actions import reward
+from repro.core.config import RouterConfig
+from repro.core.features import state_vector
+from repro.core.serving_types import RequestOutcome
+from repro.data.synthetic_squad import Question
+from repro.routing.backends import GenerationBackend, as_backend
+from repro.routing.policy import RoutingContext, RoutingDecision, RoutingPolicy
+from repro.routing.registry import (ActionSpace, get_action_space,
+                                    get_slo_profile)
+from repro.serving.slo_budget import DEFAULT_TARGETS, SLOBudgetTracker
+
+
+@dataclass
+class Request:
+    qid: int
+    question: Question
+    slo: str = "quality_first"
+    arrival_ms: float = 0.0
+
+
+@dataclass
+class GatewayStats:
+    served: int = 0
+    total_reward: float = 0.0
+    action_counts: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
+    refusal_cap_history: List[float] = field(default_factory=list)
+    decisions: List[RoutingDecision] = field(default_factory=list)
+
+    @property
+    def avg_reward(self) -> float:
+        return self.total_reward / max(self.served, 1)
+
+
+class Gateway:
+    """Queue → route → execute → account, for any policy × backend."""
+
+    def __init__(self, policy: RoutingPolicy, backend: GenerationBackend, *,
+                 router_cfg: Optional[RouterConfig] = None, index=None,
+                 state_fn: Optional[Callable[[Sequence[Question]], np.ndarray]] = None,
+                 action_space: Optional[ActionSpace] = None,
+                 max_batch: int = 16, adaptive_refusal: bool = True,
+                 base_refusal_share: float = 0.6, budget_targets=None,
+                 on_outcome: Optional[Callable] = None):
+        self.policy = policy
+        self.backend = as_backend(backend)
+        self.space = action_space or get_action_space()
+        if state_fn is None:
+            index = index if index is not None else getattr(self.backend,
+                                                            "index", None)
+            if index is None or router_cfg is None:
+                raise ValueError(
+                    "Gateway needs state_fn, or index+router_cfg to build "
+                    "the default state_vector featurizer")
+            state_fn = lambda qs: np.stack(
+                [state_vector(q.text, index, router_cfg) for q in qs])
+        self.state_fn = state_fn
+        self.max_batch = max_batch
+        self.adaptive = adaptive_refusal
+        self.base_share = base_refusal_share
+        self.budget = SLOBudgetTracker(budget_targets or DEFAULT_TARGETS)
+        # observability hook: called with (request, action, outcome, reward)
+        # after every served request — replaces hand-rolled serve loops in
+        # examples/drivers that only wanted per-request reporting
+        self.on_outcome = on_outcome
+        self.stats = GatewayStats()
+        self.queue: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, reqs: Sequence[Request]) -> None:
+        self.queue.extend(reqs)
+
+    def _route(self, batch: List[Request]):
+        states = self.state_fn([r.question for r in batch])
+        cap = None
+        if self.adaptive:
+            cap = self.budget.refusal_cap_adjustment(self.base_share)
+        ctx = RoutingContext(refusal_cap=cap, action_space=self.space)
+        slos = [r.slo for r in batch]
+        return self.policy.route(states, slos, ctx), cap
+
+    def step(self) -> Optional[GatewayStats]:
+        """Serve one micro-batch off the queue."""
+        if not self.queue:
+            return None
+        batch, self.queue = self.queue[: self.max_batch], \
+            self.queue[self.max_batch:]
+        decision, cap = self._route(batch)
+        # only log the cap when the policy actually enforced it — a
+        # logit-less policy (e.g. FixedPolicy) cannot demote refusals,
+        # and the history must not claim back-pressure that was a no-op
+        if cap is not None and "refusal_cap" in decision.constraints:
+            self.stats.refusal_cap_history.append(cap)
+        self.stats.decisions.append(decision)
+        if len(self.stats.decisions) > 256:   # bound memory in long runs
+            del self.stats.decisions[0]
+
+        # bucket by action so each retrieval depth / generation mode
+        # runs as one batched backend call
+        buckets: Dict[int, List[int]] = defaultdict(list)
+        for i, a in enumerate(decision.actions):
+            buckets[int(a)].append(i)
+
+        for a, idxs in sorted(buckets.items()):
+            action = self.space[a]
+            t0 = time.time()
+            outs = self.backend.execute_batch(
+                [batch[i].question for i in idxs], action)
+            lat_ms = (time.time() - t0) * 1e3 / max(len(idxs), 1)
+            for i, out in zip(idxs, outs):
+                r = batch[i]
+                profile = get_slo_profile(r.slo)
+                rew = reward(profile, correct=out.correct,
+                             cost_tokens=out.cost_tokens,
+                             hallucinated=out.hallucinated,
+                             refused=out.refused,
+                             answerable=out.answerable,
+                             pre_retrieval=(a == self.space.refuse_action))
+                outcome = RequestOutcome(
+                    qid=r.qid, action=a, correct=out.correct,
+                    refused=out.refused, hallucinated=out.hallucinated,
+                    cost_tokens=out.cost_tokens,
+                    answerable=out.answerable, latency_ms=lat_ms)
+                self.budget.record(outcome)
+                self.stats.served += 1
+                self.stats.total_reward += rew
+                self.stats.action_counts[a] += 1
+                if self.on_outcome is not None:
+                    self.on_outcome(r, action, out, rew)
+        return self.stats
+
+    def drain(self) -> GatewayStats:
+        while self.queue:
+            self.step()
+        return self.stats
+
+    def serve(self, reqs: Sequence[Request]) -> GatewayStats:
+        """Convenience: submit + drain."""
+        self.submit(reqs)
+        return self.drain()
+
+    @property
+    def refusal_share(self) -> float:
+        ref = self.space.refuse_action
+        if ref is None:
+            return 0.0
+        return self.stats.action_counts.get(ref, 0) / max(self.stats.served, 1)

@@ -1,3 +1,6 @@
+"""Serving layer: the RAG executor, the unified Gateway facade (see
+``repro.routing``), the legacy Scheduler wrapper, SLO error budgets,
+and the KV-cache generation engine."""
 from repro.serving.pipeline import RAGPipeline, ActionOutcome
 
 __all__ = ["RAGPipeline", "ActionOutcome"]

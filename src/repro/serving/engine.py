@@ -57,15 +57,18 @@ class Engine:
         cache = self.model.init_cache(B, plen + max_new_tokens)
         nxt, cache = self._prefill(self.params, cache, jnp.asarray(toks))
         out = [np.asarray(nxt)]
+        # per-sequence finished flags: a sequence is done once it has
+        # emitted EOS at least once; stop when every sequence has
+        done = out[0].reshape(B) == EOS
         tok = nxt[:, None]
         steps = 1
         for _ in range(max_new_tokens - 1):
+            if done.all():
+                break
             tok, cache = self._decode(self.params, cache, tok)
             out.append(np.asarray(tok))
+            done |= out[-1].reshape(B) == EOS
             tok = tok[:, None]
             steps += 1
-            if np.all(np.concatenate([o.reshape(B, -1) for o in out],
-                                     axis=1) == EOS):
-                break
         return GenerationResult(np.stack([o.reshape(B) for o in out], axis=1),
                                 steps)

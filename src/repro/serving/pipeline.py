@@ -1,8 +1,10 @@
 """The RAG pipeline executor: action -> retrieve -> generate -> score.
 
-This is the system under control: the SLO router picks an action, the
-pipeline executes it against the retrieval index and a generation
-backend, and emits the per-query metrics the reward (eq. 1) consumes.
+This is the system under control: a routing policy (see
+``repro.routing``) picks an action, the pipeline executes it against
+the retrieval index and a generation backend, and emits the per-query
+metrics the reward (eq. 1) consumes.  In the Gateway serve path this
+pipeline sits behind ``repro.routing.backends.SimulatorBackend``.
 """
 from __future__ import annotations
 
@@ -11,7 +13,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.actions import ACTIONS, Action
+from repro.core.actions import Action
+from repro.routing.registry import ActionSpace, get_action_space
 from repro.data.synthetic_squad import Question
 from repro.generation.simulator import SimulatedGenerator
 from repro.retrieval.bm25 import BM25Index
@@ -61,6 +64,9 @@ class RAGPipeline:
             cost_tokens=float(out.cost_tokens), hit=hit,
             answerable=q.answerable, answer=out.answer)
 
-    def sweep(self, q: Question) -> list:
-        """Full action sweep (paper §4.1) — one outcome per action."""
-        return [self.execute(q, a) for a in ACTIONS]
+    def sweep(self, q: Question,
+              space: Optional[ActionSpace] = None) -> list:
+        """Full action sweep (paper §4.1) — one outcome per action of
+        the given (default: paper) action space."""
+        space = space if space is not None else get_action_space()
+        return [self.execute(q, a) for a in space]

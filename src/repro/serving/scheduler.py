@@ -1,4 +1,4 @@
-"""Request scheduler: SLO-routed batched serving with budget feedback.
+"""Legacy scheduler facade over the unified routing Gateway.
 
 The production loop the paper's controller lives in:
 
@@ -7,53 +7,36 @@ The production loop the paper's controller lives in:
            batched per mode) -> record outcomes -> error budgets
         -> (adaptive mitigation) budget burn tightens the refusal share.
 
-Generation executes through the RAGPipeline backend (simulator or local
-JAX model); batching here is the control-plane batching — the engine's
-prefill/decode batching is exercised by examples/serve_rag_slo.py.
+That loop now lives in :class:`repro.routing.gateway.Gateway`, behind
+the pluggable :class:`~repro.routing.policy.RoutingPolicy` /
+:class:`~repro.routing.backends.GenerationBackend` protocols.
+:class:`Scheduler` is kept as a thin backward-compatible wrapper for
+callers that hold raw MLP params + a simulator pipeline; new code
+should construct a ``Gateway`` directly.
 """
 from __future__ import annotations
 
-import time
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.actions import ACTIONS, REFUSE_ACTION, SLO_PROFILES, reward
-from repro.core.config import RouterConfig, SLOProfile
-from repro.core.features import state_vector
-from repro.core.policy import policy_logits
-from repro.core.serving_types import RequestOutcome
-from repro.data.synthetic_squad import Question
+from repro.core.config import RouterConfig
+from repro.routing.backends import SimulatorBackend
+from repro.routing.gateway import Gateway, GatewayStats, Request
+from repro.routing.policy import MLPPolicy
 from repro.serving.pipeline import RAGPipeline
-from repro.serving.slo_budget import DEFAULT_TARGETS, SLOBudgetTracker
 
-import jax.numpy as jnp
+# Backward-compatible aliases: the scheduler's request/stats types ARE
+# the gateway's.
+SchedulerStats = GatewayStats
 
-
-@dataclass
-class Request:
-    qid: int
-    question: Question
-    slo: str = "quality_first"
-    arrival_ms: float = 0.0
-
-
-@dataclass
-class SchedulerStats:
-    served: int = 0
-    total_reward: float = 0.0
-    action_counts: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
-    refusal_cap_history: List[float] = field(default_factory=list)
-
-    @property
-    def avg_reward(self) -> float:
-        return self.total_reward / max(self.served, 1)
+__all__ = ["Request", "Scheduler", "SchedulerStats"]
 
 
 class Scheduler:
-    """Micro-batching scheduler with adaptive refusal back-pressure."""
+    """Micro-batching scheduler with adaptive refusal back-pressure.
+
+    Thin wrapper: ``Scheduler(pipe, params, cfg)`` ==
+    ``Gateway(MLPPolicy(params, cfg), SimulatorBackend(pipe), ...)``.
+    """
 
     def __init__(self, pipeline: RAGPipeline, policy_params, router_cfg:
                  RouterConfig, *, index=None, max_batch: int = 16,
@@ -62,78 +45,31 @@ class Scheduler:
         self.params = policy_params
         self.rcfg = router_cfg
         self.index = index if index is not None else pipeline.index
-        self.max_batch = max_batch
-        self.adaptive = adaptive_refusal
-        self.base_share = base_refusal_share
-        self.budget = SLOBudgetTracker(DEFAULT_TARGETS)
-        self.stats = SchedulerStats()
-        self.queue: List[Request] = []
+        self.gateway = Gateway(
+            MLPPolicy(policy_params, router_cfg),
+            SimulatorBackend(pipeline),
+            router_cfg=router_cfg, index=self.index, max_batch=max_batch,
+            adaptive_refusal=adaptive_refusal,
+            base_refusal_share=base_refusal_share)
 
     # ------------------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.gateway.queue
+
+    @property
+    def stats(self) -> GatewayStats:
+        return self.gateway.stats
+
+    @property
+    def budget(self):
+        return self.gateway.budget
+
     def submit(self, reqs: Sequence[Request]) -> None:
-        self.queue.extend(reqs)
+        self.gateway.submit(reqs)
 
-    def _route(self, batch: List[Request]) -> np.ndarray:
-        states = np.stack([state_vector(r.question.text, self.index,
-                                        self.rcfg) for r in batch])
-        logits = np.asarray(policy_logits(self.params, jnp.asarray(states),
-                                          self.rcfg))
-        acts = logits.argmax(axis=-1)
-        if self.adaptive:
-            # budget back-pressure: cap the refuse share of this batch;
-            # demote the least-confident refusals to the runner-up action
-            cap = self.budget.refusal_cap_adjustment(self.base_share)
-            self.stats.refusal_cap_history.append(cap)
-            is_ref = acts == REFUSE_ACTION
-            n_allowed = int(cap * len(batch))
-            if is_ref.sum() > n_allowed:
-                margin = logits[:, REFUSE_ACTION] - np.partition(
-                    logits, -2, axis=1)[:, -2]
-                order = np.argsort(np.where(is_ref, margin, np.inf))
-                for i in order[: int(is_ref.sum()) - n_allowed]:
-                    runner = np.argsort(logits[i])[-2]
-                    acts[i] = runner
-        return acts
+    def step(self) -> Optional[GatewayStats]:
+        return self.gateway.step()
 
-    def step(self) -> Optional[SchedulerStats]:
-        """Serve one micro-batch off the queue."""
-        if not self.queue:
-            return None
-        batch, self.queue = self.queue[: self.max_batch], \
-            self.queue[self.max_batch:]
-        acts = self._route(batch)
-
-        # bucket by action so each retrieval depth runs as one batch
-        buckets: Dict[int, List[int]] = defaultdict(list)
-        for i, a in enumerate(acts):
-            buckets[int(a)].append(i)
-
-        for a, idxs in sorted(buckets.items()):
-            action = ACTIONS[a]
-            for i in idxs:
-                r = batch[i]
-                t0 = time.time()
-                out = self.pipe.execute(r.question, action)
-                profile = SLO_PROFILES[r.slo]
-                rew = reward(profile, correct=out.correct,
-                             cost_tokens=out.cost_tokens,
-                             hallucinated=out.hallucinated,
-                             refused=out.refused,
-                             answerable=out.answerable,
-                             pre_retrieval=(a == REFUSE_ACTION))
-                outcome = RequestOutcome(
-                    qid=r.qid, action=a, correct=out.correct,
-                    refused=out.refused, hallucinated=out.hallucinated,
-                    cost_tokens=out.cost_tokens,
-                    answerable=out.answerable,
-                    latency_ms=(time.time() - t0) * 1e3)
-                self.budget.record(outcome)
-                self.stats.served += 1
-                self.stats.total_reward += rew
-                self.stats.action_counts[a] += 1
-        return self.stats
-
-    def drain(self) -> SchedulerStats:
-        while self.queue:
-            self.step()
-        return self.stats
+    def drain(self) -> GatewayStats:
+        return self.gateway.drain()

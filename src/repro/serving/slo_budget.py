@@ -5,6 +5,10 @@ Beyer et al.'s SRE book; this module closes that loop operationally:
 each SLO becomes a target + window + error budget, the serving layer
 records per-request outcomes, and the budget state can drive the router
 (e.g. tighten the refusal cap when the refusal budget burns hot).
+
+The :class:`repro.routing.gateway.Gateway` owns a tracker instance and
+threads ``refusal_cap_adjustment`` into every ``RoutingPolicy.route``
+call as the batch's refusal cap.
 """
 from __future__ import annotations
 

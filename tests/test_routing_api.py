@@ -1,0 +1,212 @@
+"""Unified Router API: registry round-trips, policy adapters, Gateway
+parity with the legacy Scheduler, and budget back-pressure."""
+import numpy as np
+import pytest
+
+from repro.core import actions as legacy
+from repro.core.config import RouterConfig, TestbedConfig
+from repro.core.metrics import fixed_action_report
+from repro.core.offline_log import build_testbed
+from repro.core.policy import policy_actions, train_policy
+from repro.routing import (ActionSpace, ConditionedPolicy, FixedPolicy,
+                           Gateway, MLPPolicy, Request, SimulatorBackend,
+                           get_action_space, get_slo_profile,
+                           list_action_spaces, register_action_space,
+                           register_slo_profile, slo_profile_from_config)
+from repro.routing.registry import SLO_PROFILES as REGISTRY_PROFILES
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    cfg = TestbedConfig(n_train=200, n_eval=80, n_paragraphs=200,
+                        router=RouterConfig(n_epochs=10))
+    return cfg, build_testbed(cfg)
+
+
+@pytest.fixture(scope="module")
+def cheap_policy(testbed):
+    cfg, (_, _, _, train_log, _) = testbed
+    return MLPPolicy.train(
+        train_log, train_log.rewards(get_slo_profile("cheap")),
+        cfg.router, objective="argmax_ce")
+
+
+# --- registry ---------------------------------------------------------------
+
+
+def test_paper_space_matches_legacy_constants():
+    space = get_action_space()
+    assert space.name == "paper5"
+    assert space.actions == legacy.ACTIONS
+    assert space.n_actions == legacy.N_ACTIONS == len(space)
+    assert space.refuse_action == legacy.REFUSE_ACTION
+    assert [a.k for a in space] == [2, 5, 10, 5, 0]
+
+
+def test_action_space_config_roundtrip():
+    space = get_action_space("paper5")
+    again = ActionSpace.from_config(space.to_config())
+    assert again == space
+
+    custom = ActionSpace.from_config({
+        "name": "deep7",
+        "actions": [{"k": k, "mode": "guarded"} for k in (1, 2, 4, 8, 16, 32)]
+                   + [{"k": 0, "mode": "refuse"}]})
+    register_action_space(custom)
+    try:
+        assert get_action_space("deep7") is custom
+        assert custom.refuse_action == 6
+        assert "deep7" in list_action_spaces()
+        with pytest.raises(ValueError):
+            register_action_space(custom)          # duplicate name
+    finally:
+        from repro.routing.registry import _ACTION_SPACES
+        _ACTION_SPACES.pop("deep7", None)
+
+
+def test_action_space_validation():
+    with pytest.raises(ValueError):               # refuse must have k=0
+        ActionSpace("bad", (legacy.Action(0, 3, "refuse"),))
+    with pytest.raises(ValueError):               # idx must match position
+        ActionSpace("bad", (legacy.Action(1, 3, "guarded"),))
+    with pytest.raises(ValueError):               # unknown mode
+        ActionSpace("bad", (legacy.Action(0, 3, "creative"),))
+    with pytest.raises(KeyError):
+        get_action_space("nope")
+
+
+def test_slo_profile_registry_roundtrip_and_legacy_view():
+    p = slo_profile_from_config(dict(
+        name="latency_paranoid", w_acc=0.5, w_cost=1.5, w_hall=0.2,
+        w_ref=0.2, w_ref_wrong=0.4))
+    register_slo_profile(p)
+    try:
+        assert get_slo_profile("latency_paranoid") is p
+        # the legacy dict is a live view of the registry
+        assert legacy.SLO_PROFILES["latency_paranoid"] is p
+        with pytest.raises(ValueError):
+            register_slo_profile(p)
+    finally:
+        REGISTRY_PROFILES.pop("latency_paranoid", None)
+    assert "latency_paranoid" not in legacy.SLO_PROFILES
+    # profiles pass through resolution unchanged
+    assert get_slo_profile(p) is p
+    with pytest.raises(KeyError):
+        get_slo_profile("latency_paranoid")
+
+
+# --- policy adapters --------------------------------------------------------
+
+
+def test_mlp_policy_matches_policy_actions(testbed, cheap_policy):
+    cfg, (_, _, _, _, eval_log) = testbed
+    d = cheap_policy.route(eval_log.states)
+    ref = policy_actions(cheap_policy.params, eval_log.states, cfg.router)
+    np.testing.assert_array_equal(d.actions, ref)
+    assert d.logits.shape == (eval_log.n, legacy.N_ACTIONS)
+    assert d.confidences.shape == (eval_log.n,)
+    assert ((0 < d.confidences) & (d.confidences <= 1)).all()
+
+
+def test_fixed_policy_decision():
+    pol = FixedPolicy(2)
+    d = pol.route(np.zeros((7, 4), np.float32))
+    assert (d.actions == 2).all() and d.n == 7
+    assert d.policy == "fixed(a2)"
+
+
+def test_conditioned_policy_route(testbed):
+    cfg, (_, _, _, train_log, eval_log) = testbed
+    profiles = [get_slo_profile("quality_first"), get_slo_profile("cheap")]
+    pol = ConditionedPolicy.train(train_log, profiles, cfg.router, n_interp=0)
+    a_q = pol.route(eval_log.states, "quality_first").actions
+    a_c = pol.route(eval_log.states, "cheap").actions
+    # per-request SLO list must agree with the uniform call
+    mixed = pol.route(eval_log.states, ["cheap"] * eval_log.n).actions
+    np.testing.assert_array_equal(mixed, a_c)
+    # conditioning must matter (cheap refuses more)
+    assert (a_c == legacy.REFUSE_ACTION).mean() >= \
+        (a_q == legacy.REFUSE_ACTION).mean()
+    with pytest.raises(ValueError):
+        pol.route(eval_log.states)                # SLO is required
+
+
+# --- Gateway ----------------------------------------------------------------
+
+
+def _requests(data, n, slo):
+    return [Request(qid=q.qid, question=q, slo=slo)
+            for q in data.questions[-n:]]
+
+
+def test_gateway_parity_with_legacy_scheduler(testbed, cheap_policy):
+    """The Scheduler path and a directly-constructed Gateway must agree
+    bit-for-bit: same actions, rewards, and cap history for same seeds."""
+    cfg, (data, index, pipe, train_log, _) = testbed
+    reqs = _requests(data, 80, "cheap")
+
+    sched = Scheduler(pipe, cheap_policy.params, cfg.router, max_batch=16,
+                      adaptive_refusal=True, base_refusal_share=0.5)
+    sched.submit(list(reqs))
+    s_stats = sched.drain()
+
+    gw = Gateway(cheap_policy, SimulatorBackend(pipe), router_cfg=cfg.router,
+                 index=index, max_batch=16, adaptive_refusal=True,
+                 base_refusal_share=0.5)
+    g_stats = gw.serve(list(reqs))
+
+    assert dict(g_stats.action_counts) == dict(s_stats.action_counts)
+    assert g_stats.served == s_stats.served == 80
+    assert g_stats.avg_reward == pytest.approx(s_stats.avg_reward, abs=1e-12)
+    assert g_stats.refusal_cap_history == s_stats.refusal_cap_history
+
+
+def test_gateway_fixed_policy_matches_offline_report(testbed):
+    """FixedPolicy(a1) through the Gateway reproduces the logged fixed
+    baseline: deterministic simulator + same reward equation."""
+    cfg, (data, index, pipe, train_log, eval_log) = testbed
+    gw = Gateway(FixedPolicy(1), SimulatorBackend(pipe),
+                 router_cfg=cfg.router, index=index, adaptive_refusal=False)
+    stats = gw.serve(_requests(data, 80, "quality_first"))
+    assert dict(stats.action_counts) == {1: 80}
+    rep = fixed_action_report(eval_log, 1, get_slo_profile("quality_first"))
+    assert stats.avg_reward == pytest.approx(rep.reward, abs=1e-6)
+
+
+def test_gateway_budget_backpressure(testbed, cheap_policy):
+    """Refusal-cap tightening still fires through the new path."""
+    cfg, (data, index, pipe, _, _) = testbed
+    reqs = _requests(data, 80, "cheap")
+
+    free = Gateway(cheap_policy, SimulatorBackend(pipe),
+                   router_cfg=cfg.router, index=index, max_batch=16,
+                   adaptive_refusal=False)
+    capped = Gateway(cheap_policy, SimulatorBackend(pipe),
+                     router_cfg=cfg.router, index=index, max_batch=16,
+                     adaptive_refusal=True, base_refusal_share=0.5)
+    free.serve(list(reqs))
+    capped.serve(list(reqs))
+
+    assert capped.refusal_share <= 0.55 + 1e-9
+    assert capped.refusal_share <= free.refusal_share
+    # budget burn tightened the per-batch cap below the base share
+    assert min(capped.stats.refusal_cap_history) < 0.5
+    # decisions carry the applied constraint
+    d = capped.stats.decisions[-1]
+    assert "refusal_cap" in d.constraints
+    assert np.isfinite(capped.stats.avg_reward)
+
+
+def test_gateway_mixed_slo_batch(testbed, cheap_policy):
+    """Per-request SLOs in one micro-batch: rewards use each request's
+    own profile."""
+    cfg, (data, index, pipe, _, _) = testbed
+    reqs = _requests(data, 20, "cheap")
+    for r in reqs[::2]:
+        r.slo = "quality_first"
+    gw = Gateway(cheap_policy, SimulatorBackend(pipe), router_cfg=cfg.router,
+                 index=index, max_batch=20, adaptive_refusal=False)
+    stats = gw.serve(reqs)
+    assert stats.served == 20
+    assert np.isfinite(stats.avg_reward)

@@ -1,4 +1,5 @@
-"""Serving layer: scheduler, error budgets, int8 KV cache."""
+"""Serving layer: scheduler (Gateway-backed), error budgets, the
+generation engine's termination logic, int8 KV cache."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -92,6 +93,52 @@ def test_budget_report_shapes(served):
     sched, _ = served
     rep = sched.budget.report()
     assert set(rep) == {"refusal", "hallucination", "cost", "error"}
+
+
+# --- engine termination -----------------------------------------------------
+
+
+class _ConstModel:
+    """Stub model emitting a constant next token (prefill vs decode)."""
+
+    def __init__(self, prefill_tok, decode_tok, vocab=16):
+        self.prefill_tok, self.decode_tok, self.vocab = \
+            prefill_tok, decode_tok, vocab
+
+    def init_cache(self, B, L):
+        return jnp.zeros((1,))
+
+    def _logits(self, tokens, tok):
+        B, T = tokens.shape
+        return jax.nn.one_hot(jnp.full((B, T), tok), self.vocab)
+
+    def prefill(self, params, batch, cache, moe_fn=None, mla_absorb=False):
+        return self._logits(batch["tokens"], self.prefill_tok), cache
+
+    def decode(self, params, batch, cache, moe_fn=None, mla_absorb=False):
+        return self._logits(batch["tokens"], self.decode_tok), cache
+
+
+def test_engine_stops_once_every_sequence_emitted_eos():
+    """Regression: the old check required EVERY emitted token to be EOS,
+    so generation never early-exited; per-sequence tracking must stop as
+    soon as all sequences have emitted EOS at least once — even if the
+    model would emit non-EOS tokens afterwards."""
+    from repro.data.tokenizer import EOS
+    from repro.serving.engine import Engine
+    eng = Engine(_ConstModel(prefill_tok=EOS, decode_tok=5), params={})
+    res = eng.generate([[4, 5], [6]], max_new_tokens=6)
+    assert res.n_steps == 1
+    assert res.tokens.shape == (2, 1)
+    assert (res.tokens[:, 0] == EOS).all()
+
+
+def test_engine_runs_full_length_without_eos():
+    from repro.serving.engine import Engine
+    eng = Engine(_ConstModel(prefill_tok=7, decode_tok=5), params={})
+    res = eng.generate([[4, 5], [6]], max_new_tokens=6)
+    assert res.n_steps == 6
+    assert res.tokens.shape == (2, 6)
 
 
 # --- int8 KV cache ----------------------------------------------------------
