@@ -16,8 +16,10 @@ from repro.kernels.ops import bm25_scores
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warmup invocation; jax.block_until_ready handles pytrees, so
+    # no isinstance probe (which used to re-invoke the closure and skew
+    # every reported number)
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -50,6 +52,26 @@ def main() -> dict:
         out[f"flash_tile_{bq}x{bkv}"] = {
             "vmem_bytes_per_tile": vmem,
             "fits_16MB_vmem": vmem < 16 * 2**20}
+
+    # flash decode: kernel (interpret) vs dense oracle at slot-cache shape
+    from repro.kernels import flash_decode
+    S, L, H, Hkv, D = 8, 512, 4, 4, 64
+    q = jax.random.normal(key, (S, H, D))
+    kc = jax.random.normal(key, (S, L, Hkv, D))
+    vc = jax.random.normal(key, (S, L, Hkv, D))
+    lens = (jnp.arange(S) * 61 % L + 1).astype(jnp.int32)
+    t_fd = _time(lambda: flash_decode(q, kc, vc, lens))
+    lens_f = jnp.repeat(lens, H)
+    fd_ref = jax.jit(lambda: ref.flash_decode_ref(
+        q.reshape(S * H, D),
+        kc.transpose(0, 2, 1, 3).reshape(S * H, L, D),
+        vc.transpose(0, 2, 1, 3).reshape(S * H, L, D), lens_f))
+    t_fd_ref = _time(fd_ref)
+    out["flash_decode"] = {
+        "us_pallas_interp": round(t_fd, 1),
+        "us_jnp_ref": round(t_fd_ref, 1),
+        "shape": f"S{S}xL{L}xH{H}xD{D}",
+        "vmem_tile_bytes": (D + 2 * 128 * D + D + 2) * 4}
 
     save_artifact("kernels_bench", out)
     for k, v in out.items():

@@ -1,0 +1,217 @@
+"""Serving throughput: padded per-bucket Engine vs continuous engine.
+
+Mixed-action synthetic workload (the paper testbed's questions, BM25
+retrieval at each routed depth) with heterogeneous per-request
+generation lengths — most answers are short, a tail is long, exactly
+the EOS behaviour a real model produces — served two ways:
+
+* **padded**: requests bucketed by action, each bucket one serial
+  prefill+decode `Engine.generate` call (the pre-continuous Gateway
+  execution model).  A bucket decodes until its LAST request finishes,
+  so every short request burns wasted decode steps waiting for the
+  bucket's longest, and a fresh KV cache is allocated per call.
+* **continuous**: a bounded slot pool (`num_slots` << workload) in one
+  `ContinuousEngine`; a request frees its slot the moment it finishes
+  and the next queued request is admitted mid-stream, across action
+  buckets, so the decode batch only ever does useful work.
+
+Both paths produce the same useful tokens (each request's own length,
+trimmed at its own EOS); tokens/s counts useful tokens only, so the
+padded path's run-to-bucket-max waste shows up as time, not tokens.
+Decode tokens/s is isolated by differencing a prefill-only run
+(length 1) from the full run.  The prefill-only run admits in full
+`prefill_batch` groups while the full run also admits smaller
+mid-stream groups, so some extra prefill dispatch time is charged to
+the continuous engine's decode — the isolation is conservative for the
+continuous side.  Per-request latency is completion time since
+workload start (padded requests inherit their bucket's serial position
+and its longest member — head-of-line blocking the continuous engine
+does not have).
+
+Writes ``benchmarks/artifacts/BENCH_serving.json``.
+
+    PYTHONPATH=src:. python benchmarks/serving_bench.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.configs import get_config
+from repro.core.config import RetrievalConfig
+from repro.data.synthetic_squad import SyntheticSquad
+from repro.data.tokenizer import EOS, HashTokenizer
+from repro.generation.prompts import build_prompt
+from repro.models import build_model
+from repro.retrieval.bm25 import BM25Index
+from repro.routing.registry import get_action_space
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Engine
+
+N_REQUESTS = 32
+GATEWAY_BATCH = 16     # Gateway.step micro-batch (the old serving unit)
+NUM_SLOTS = 4          # continuous slot pool (<< micro-batch: constant
+                       # admission pressure keeps every row useful)
+MAX_PROMPT = 48
+MAX_NEW = 64
+MAX_LEN = MAX_PROMPT + MAX_NEW
+# per-request generation lengths: 3 short answers per long one — the
+# heterogeneous-termination pattern continuous batching exists for
+LENGTHS = (2, 4, 4, 64)
+SYNC_EVERY = 4
+REPEATS = 5            # best-of-N walls (the container CPU is noisy)
+
+
+def build_workload():
+    """(prompt_tokens, action_idx, gen_len) per request, mixed across
+    the paper5 non-refuse actions (deep-k, shallow-k, auto)."""
+    data = SyntheticSquad(n_paragraphs=120, n_questions=N_REQUESTS, seed=0)
+    index = BM25Index.build([p.text for p in data.paragraphs],
+                            RetrievalConfig(vocab_hash_dim=1024))
+    space = get_action_space()
+    gen_actions = [a for a in space if a.mode != "refuse"]
+    tok = HashTokenizer(512)
+    workload = []
+    for i, q in enumerate(data.questions):
+        action = gen_actions[i % len(gen_actions)]
+        idx, _ = index.topk(q.text, action.k) if action.k else ([], None)
+        passages = [index.texts[j] for j in idx]
+        prompt = build_prompt(action.mode, q.text, passages)
+        workload.append((tok.encode(prompt, bos=True, max_len=MAX_PROMPT),
+                         action.idx, LENGTHS[(i // len(gen_actions))
+                                             % len(LENGTHS)]))
+    return workload
+
+
+def _micro_batches(workload):
+    for i in range(0, len(workload), GATEWAY_BATCH):
+        yield workload[i:i + GATEWAY_BATCH]
+
+
+def run_padded(engine, workload, prefill_only=False):
+    """The old Gateway execution model: per micro-batch, requests are
+    bucketed by routed action and every bucket is a serial
+    prefill+decode `Engine.generate` call.  A bucket decodes to its
+    LONGEST member's length; only each request's own `gen_len` tokens
+    count as useful."""
+    t0 = time.time()
+    useful = 0
+    lat = []
+    for mb in _micro_batches(workload):
+        buckets = defaultdict(list)
+        for prompt, a, n in mb:
+            buckets[a].append((prompt, 1 if prefill_only else n))
+        for a in sorted(buckets):
+            prompts = [p for p, _ in buckets[a]]
+            lens = [n for _, n in buckets[a]]
+            res = engine.generate(prompts, max_new_tokens=max(lens))
+            for row, n in zip(res.tokens, lens):
+                # credit only tokens up to the request's own budget AND
+                # its own EOS — the bucket keeps decoding for its
+                # longest member, but those are not useful tokens
+                eos = np.nonzero(row == EOS)[0]
+                own = eos[0] + 1 if eos.size else res.n_steps
+                useful += int(min(n, own))
+            done_at = (time.time() - t0) * 1e3
+            lat += [done_at] * len(prompts)  # bucket completes together
+    return useful, time.time() - t0, lat
+
+
+def run_continuous(engine, workload, prefill_only=False):
+    """The continuous Gateway model: each micro-batch's action buckets
+    all feed the bounded slot pool of ONE engine; finished slots admit
+    queued requests mid-stream."""
+    t0 = time.time()
+    useful = 0
+    lat = []
+    for mb in _micro_batches(workload):
+        rids = []
+        for prompt, _, n in mb:
+            rid = engine.reserve_rid()
+            engine.submit(rid, prompt, 1 if prefill_only else n)
+            rids.append(rid)
+        done = engine.run()
+        useful += sum(done[r].n_steps for r in rids)
+        lat += [(done[r].finished_at - t0) * 1e3 for r in rids]
+    return useful, time.time() - t0, lat
+
+
+def main() -> dict:
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = build_workload()
+
+    out = {"n_requests": N_REQUESTS, "num_slots": NUM_SLOTS,
+           "gen_lengths": list(LENGTHS), "max_prompt_len": MAX_PROMPT,
+           "model": mcfg.name, "n_buckets": len({a for _, a, _ in workload}),
+           "useful_tokens": sum(n for _, _, n in workload)}
+    # ONE engine instance per execution model, reused across all trials
+    # — jit caches are per instance, so fresh engines would put seconds
+    # of retrace/compile inside every timed window
+    engines = {
+        "padded": Engine(model, params, max_len=MAX_LEN),
+        "continuous": ContinuousEngine(
+            model, params, num_slots=NUM_SLOTS, max_len=MAX_LEN,
+            max_new_cap=MAX_NEW, sync_every=SYNC_EVERY,
+            prefill_batch=NUM_SLOTS),
+    }
+    runners = (("padded", run_padded), ("continuous", run_continuous))
+    best = {}
+    for name, runner in runners:
+        runner(engines[name], workload)                # warmup (compile)
+        runner(engines[name], workload, prefill_only=True)
+        best[name] = {"decode_t": 9e9, "decode_tok": 0, "full": (0, 9e9, [])}
+    # interleave trials so both engines sample the same noise windows
+    # (shared-container CPU); the prefill-only and full runs of a trial
+    # are paired back-to-back so their difference correlates the noise
+    for _ in range(REPEATS):
+        for name, runner in runners:
+            tok_pre, t_pre, _ = runner(engines[name], workload,
+                                       prefill_only=True)
+            full = runner(engines[name], workload)
+            d_t = max(full[1] - t_pre, 1e-9)
+            if d_t < best[name]["decode_t"]:
+                best[name]["decode_t"] = d_t
+                best[name]["decode_tok"] = full[0] - tok_pre
+            if full[1] < best[name]["full"][1]:
+                best[name]["full"] = full
+    for name, _runner in runners:
+        tok_full, t_full, lat = best[name]["full"]
+        decode_tok = best[name]["decode_tok"]
+        decode_t = best[name]["decode_t"]
+        out[name] = {
+            "tokens": tok_full,
+            "wall_s": round(t_full, 4),
+            "tokens_per_s": round(tok_full / t_full, 1),
+            "decode_tokens_per_s": round(decode_tok / decode_t, 1),
+            "latency_ms_mean": round(float(np.mean(lat)), 1),
+            "latency_ms_p50": round(float(np.percentile(lat, 50)), 1),
+            "latency_ms_max": round(float(np.max(lat)), 1),
+        }
+        print(name, out[name])
+
+    out["decode_speedup"] = round(
+        out["continuous"]["decode_tokens_per_s"]
+        / out["padded"]["decode_tokens_per_s"], 2)
+    out["e2e_speedup"] = round(
+        out["continuous"]["tokens_per_s"]
+        / out["padded"]["tokens_per_s"], 2)
+    out["latency_mean_speedup"] = round(
+        out["padded"]["latency_ms_mean"]
+        / out["continuous"]["latency_ms_mean"], 2)
+    print(f"decode speedup: {out['decode_speedup']}x; "
+          f"end-to-end: {out['e2e_speedup']}x; "
+          f"mean latency: {out['latency_mean_speedup']}x lower")
+    save_artifact("BENCH_serving", out)
+    return {"decode_speedup": out["decode_speedup"]}
+
+
+if __name__ == "__main__":
+    print(main())

@@ -25,8 +25,10 @@ from repro.core.config import TestbedConfig
 from repro.core.offline_log import build_testbed
 from repro.data.tokenizer import HashTokenizer
 from repro.models import build_model
-from repro.routing import (EngineBackend, Gateway, MLPPolicy, Request,
-                           get_slo_profile, list_slo_profiles)
+from repro.routing import (ContinuousEngineBackend, EngineBackend, Gateway,
+                           MLPPolicy, Request, get_slo_profile,
+                           list_slo_profiles)
+from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Engine
 
 
@@ -36,6 +38,10 @@ def main():
                     choices=list_slo_profiles())
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--engine", default="continuous",
+                    choices=("continuous", "padded"),
+                    help="continuous = slot-based shared decode stream; "
+                         "padded = legacy serial per-bucket engine")
     args = ap.parse_args()
     profile = get_slo_profile(args.slo)
 
@@ -49,8 +55,20 @@ def main():
     mcfg = get_config("qwen1.5-32b", "smoke")
     model = build_model(mcfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, max_len=512)
     tok = HashTokenizer(mcfg.vocab_size)
+    # slot caches must hold the padded prompt plus the generation
+    # budget; the backend pads every prompt to max_prompt_len
+    max_prompt_len = 384
+    max_len = max_prompt_len + args.max_new_tokens
+    if args.engine == "continuous":
+        engine = ContinuousEngine(model, params, num_slots=args.batch,
+                                  max_len=max_len,
+                                  max_new_cap=args.max_new_tokens,
+                                  prefill_batch=args.batch)
+        backend_cls = ContinuousEngineBackend
+    else:
+        engine = Engine(model, params, max_len=max_len)
+        backend_cls = EngineBackend
 
     def report(req, action, out, rew):
         status = "REFUSED(pre)" if out.refused else out.answer
@@ -60,8 +78,8 @@ def main():
 
     gateway = Gateway(
         policy,
-        EngineBackend(engine, tok, index,
-                      max_new_tokens=args.max_new_tokens),
+        backend_cls(engine, tok, index, max_prompt_len=max_prompt_len,
+                    max_new_tokens=args.max_new_tokens),
         router_cfg=cfg.router, index=index, max_batch=args.batch,
         adaptive_refusal=False, on_outcome=report)
 

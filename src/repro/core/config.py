@@ -85,6 +85,10 @@ class ModelConfig:
     # interpret-mode on CPU — used by tests/examples, off by default)
     use_pallas_attention: bool = False
     use_pallas_ssd: bool = False
+    # route the S==1 cached-decode attention through the Pallas
+    # flash-decode kernel (split-KV online softmax over the slot cache
+    # with per-slot length masking); dense jnp path is the oracle
+    use_flash_decode: bool = False
     # §Perf H6: one-hot-matmul embedding lookup instead of gather — XLA
     # SPMD can keep a (vocab->model, d->data)-sharded table sharded for
     # a matmul but replicates it for a gather; trades extra MXU flops

@@ -2,10 +2,13 @@
 
 * ``bm25.py``            — blocked BM25 retrieval scoring;
 * ``flash_attention.py`` — online-softmax blocked attention (prefill);
+* ``flash_decode.py``    — split-KV single-query attention (decode);
 * ``ssd_scan.py``        — Mamba2 SSD chunk scan;
 * ``ops.py``             — jit'd public wrappers (interpret=True on CPU);
 * ``ref.py``             — pure-jnp oracles for the allclose sweeps.
 """
-from repro.kernels.ops import bm25_scores, flash_attention, ssd_chunk_scan
+from repro.kernels.ops import (bm25_scores, flash_attention, flash_decode,
+                               ssd_chunk_scan)
 
-__all__ = ["bm25_scores", "flash_attention", "ssd_chunk_scan"]
+__all__ = ["bm25_scores", "flash_attention", "flash_decode",
+           "ssd_chunk_scan"]

@@ -1,0 +1,107 @@
+"""Flash-decode Pallas kernel: single-query attention over a slotted KV
+cache with per-slot length masking.
+
+This is the decode-side companion of ``flash_attention.py``.  The grid
+is (slots, q_heads, kv_blocks) with the kv axis innermost; the running
+max / denominator / accumulator in VMEM scratch implement a split-KV
+online-softmax reduction — kv blocks are reduced sequentially on TPU
+without ever materializing the full (1, L) score row in one tile.  GQA
+is handled in the k/v BlockSpec index map (``q_head // group_size``
+selects the kv head), so the grouped cache is read in place — no
+repeated/expanded copy of the cache is ever materialized.
+
+The continuous-batching engine keeps every slot's cache at full
+``max_len`` and tracks a per-slot valid length (``pos + 1``); the kernel
+masks kv positions ``>= length[slot]`` so freed/stale slot tails never
+contribute.  Because positions 0..length-1 are always populated
+(length >= 1), the first kv block contains at least one unmasked entry
+and the online softmax never sees an all-masked running state.
+
+Q tiles are (1, head_dim) — decode has a single query per slot — so on
+TPU the sublane dimension is under-utilized; production would batch 8
+heads per tile.  The tests run the kernel in interpret mode (CPU
+container) against the dense oracle in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                         m_scr, l_scr, acc_scr,
+                         *, scale: float, block_kv: int, n_kv: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)           # (bk, dv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bk)
+
+    kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)
+    s = jnp.where(kv_pos < len_ref[0, 0], s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (1, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, lengths, *, block_kv: int = 128,
+                        interpret: bool = False):
+    """q: (B, H, D); k/v: (B, Hkv, L, D[v]) — kv-head-major so a q head
+    reads kv head ``h // (H // Hkv)`` in place; lengths: (B,) int32
+    valid kv length per slot (must be >= 1).  Returns (B, H, Dv)."""
+    B, H, D = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    G = H // Hkv
+    block_kv = min(block_kv, L)
+    assert L % block_kv == 0, (L, block_kv)
+    n_kv = L // block_kv
+    grid = (B, H, n_kv)
+    scale = 1.0 / (D ** 0.5)
+    lens = lengths.reshape(B, 1).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, scale=scale,
+                          block_kv=block_kv, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, ki: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, Dv),
+                         lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dv), lambda b, h, ki: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),      # running max
+            pltpu.VMEM((1, 1), jnp.float32),      # running denom
+            pltpu.VMEM((1, Dv), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)

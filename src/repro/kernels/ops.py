@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.bm25 import bm25_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -57,6 +58,33 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                                  block_q=block_q, block_kv=block_kv,
                                  interpret=_interpret())
     return out.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("block_kv",))
+def flash_decode(q, k, v, lengths, *, block_kv: int = 128):
+    """Single-query GQA attention over a slotted KV cache.
+
+    q: (B, H, D) — one query per slot; k/v: (B, L, Hkv, D[v]) — the
+    full-length slot cache; lengths: (B,) valid kv length per slot
+    (>= 1).  Returns (B, H, Dv).  The GQA head->kv-head mapping happens
+    inside the kernel's BlockSpec index map, so the grouped cache is
+    only transposed to kv-head-major — never expanded; block_kv shrinks
+    to the largest divisor of L so ragged cache lengths still tile.
+    """
+    B, H, D = q.shape
+    L = k.shape[1]
+    Dv = v.shape[-1]
+    kf = k.transpose(0, 2, 1, 3)                  # (B, Hkv, L, D)
+    vf = v.transpose(0, 2, 1, 3)
+    bk = min(block_kv, L)
+    pad = -L % bk
+    if pad:
+        # keep full-width kv blocks for any cache length; the padded
+        # tail is masked by the kernel's length check
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return flash_decode_pallas(q, kf, vf, jnp.maximum(lengths, 1),
+                               block_kv=bk, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -27,6 +27,24 @@ def flash_attention_ref(q, k, v, causal: bool = True):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def flash_decode_ref(q, k, v, lengths):
+    """Dense single-query attention over a slotted cache.
+
+    q: (BH, D); k/v: (BH, L, D[v]); lengths: (BH,) valid kv entries per
+    row.  The oracle for the flash-decode kernel and the semantics of the
+    continuous engine's decode step: positions >= lengths[b] are masked.
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    L = k.shape[1]
+    mask = jnp.arange(L)[None, :] < lengths[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def ssd_scan_ref(xdt, B_, C_, da):
     """Sequential SSD recurrence — the semantic ground truth.
 

@@ -227,10 +227,18 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
             ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
             cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
         kv_len = positions[:, -1] + 1
-        out = attention(q, ck, cv, q_pos=positions, kv_len=kv_len,
-                        causal=causal, window=window,
-                        softcap=cfg.attn_logit_softcap,
-                        q_chunk=cfg.attn_q_chunk)
+        if (S == 1 and cfg.use_flash_decode and causal and not window
+                and not cfg.attn_logit_softcap):
+            # single-query split-KV kernel over the slot cache; kv_len
+            # masking subsumes the causal mask at decode (kv_len = pos+1)
+            from repro.kernels.ops import flash_decode as _flash_decode
+            out = _flash_decode(q[:, 0], ck, cv, kv_len)[:, None]
+            out = out.astype(v.dtype)
+        else:
+            out = attention(q, ck, cv, q_pos=positions, kv_len=kv_len,
+                            causal=causal, window=window,
+                            softcap=cfg.attn_logit_softcap,
+                            q_chunk=cfg.attn_q_chunk)
         new_cache = {"k": ck, "v": cv}
 
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache

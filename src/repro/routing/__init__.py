@@ -36,6 +36,7 @@ _LAZY = {
     "SimulatorBackend": "repro.routing.backends",
     "as_backend": "repro.routing.backends",
     "EngineBackend": "repro.routing.engine_backend",
+    "ContinuousEngineBackend": "repro.routing.engine_backend",
     # gateway
     "Gateway": "repro.routing.gateway",
     "GatewayStats": "repro.routing.gateway",

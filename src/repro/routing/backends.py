@@ -17,7 +17,14 @@ from repro.serving.pipeline import ActionOutcome, RAGPipeline
 
 @runtime_checkable
 class GenerationBackend(Protocol):
-    """Executes one action for a bucket of requests."""
+    """Executes one action for a bucket of requests.
+
+    Backends may additionally provide ``execute_mixed(questions,
+    actions)`` taking one action per request; the Gateway prefers it
+    when present so the whole routed micro-batch — all action buckets —
+    executes as one shared in-flight stream (see
+    :class:`~repro.routing.engine_backend.ContinuousEngineBackend`).
+    """
 
     def execute_batch(self, questions: Sequence[Question],
                       action: Action) -> List[ActionOutcome]:

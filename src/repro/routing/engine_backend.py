@@ -1,18 +1,29 @@
-"""Real-model generation backend: BM25 retrieval + the JAX KV-cache
-:class:`~repro.serving.engine.Engine` behind the
-:class:`~repro.routing.backends.GenerationBackend` protocol.
+"""Real-model generation backends: BM25 retrieval + the JAX KV-cache
+engines behind the :class:`~repro.routing.backends.GenerationBackend`
+protocol.
 
-Replaces the hand-rolled route→retrieve→prefill/decode loop that used
-to live in ``examples/serve_rag_slo.py``: the Gateway buckets requests
-by routed action, and each non-refuse bucket becomes ONE batched
-prefill+decode call.  The tiny local model has no answer scorer, so
-outcomes carry token-accounting truth (cost, refusal) and conservative
-quality indicators (``correct=False``; unanswerable queries that get an
-answer anyway count as hallucinations), exactly as the old driver did.
+Two execution models:
+
+* :class:`EngineBackend` — the padded-bucket
+  :class:`~repro.serving.engine.Engine`: the Gateway buckets requests by
+  routed action and each non-refuse bucket becomes ONE batched
+  prefill+decode call (serial across buckets).
+* :class:`ContinuousEngineBackend` — the slot-based
+  :class:`~repro.serving.continuous.ContinuousEngine`: implements
+  ``execute_mixed`` so ALL routed buckets of a micro-batch feed one
+  shared in-flight decode stream.  Retrieval depth only changes the
+  prompt; generation is unified, so deep-k and shallow-k requests decode
+  in the same jitted step and finished slots admit queued requests
+  mid-stream.
+
+The tiny local model has no answer scorer, so outcomes carry
+token-accounting truth (cost, refusal) and conservative quality
+indicators (``correct=False``; unanswerable queries that get an answer
+anyway count as hallucinations), exactly as the old serve driver did.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 from repro.data.synthetic_squad import Question
 from repro.data.tokenizer import HashTokenizer
@@ -44,29 +55,84 @@ class EngineBackend:
         idx, _ = self.index.topk(question, k)
         return [self.index.texts[i] for i in idx]
 
+    def _prep(self, q: Question, action: Action) -> Tuple[List[int], bool]:
+        """Retrieve at the action's depth and build the prompt tokens.
+        Returns (token ids padded to max_prompt_len, retrieval hit)."""
+        passages = self._retrieve(q.text, action.k)
+        hit = bool(q.gold_answer) and any(
+            q.gold_answer in p for p in passages)
+        prompt = build_prompt(action.mode, q.text, passages)
+        return self.tok.encode(prompt, bos=True,
+                               max_len=self.max_prompt_len), hit
+
+    @staticmethod
+    def _refusal_outcome(q: Question, action: Action) -> ActionOutcome:
+        return ActionOutcome(
+            qid=q.qid, action=action.idx, correct=False, refused=True,
+            hallucinated=False, cost_tokens=REFUSE_COST_TOKENS,
+            hit=False, answerable=q.answerable, answer=REFUSAL_TEXT)
+
+    @staticmethod
+    def _generated_outcome(q: Question, action: Action, prompt_len: int,
+                           n_out: int, hit: bool) -> ActionOutcome:
+        return ActionOutcome(
+            qid=q.qid, action=action.idx, correct=False, refused=False,
+            hallucinated=not q.answerable,
+            cost_tokens=float(prompt_len + n_out), hit=hit,
+            answerable=q.answerable,
+            answer=f"<{n_out} generated tokens>")
+
     def execute_batch(self, questions: Sequence[Question],
                       action: Action) -> List[ActionOutcome]:
         if action.mode == "refuse":
-            return [ActionOutcome(
-                qid=q.qid, action=action.idx, correct=False, refused=True,
-                hallucinated=False, cost_tokens=REFUSE_COST_TOKENS,
-                hit=False, answerable=q.answerable, answer=REFUSAL_TEXT)
-                for q in questions]
-
+            return [self._refusal_outcome(q, action) for q in questions]
         prompts, hits = [], []
         for q in questions:
-            passages = self._retrieve(q.text, action.k)
-            hits.append(bool(q.gold_answer) and any(
-                q.gold_answer in p for p in passages))
-            prompt = build_prompt(action.mode, q.text, passages)
-            prompts.append(self.tok.encode(prompt, bos=True,
-                                           max_len=self.max_prompt_len))
+            toks, hit = self._prep(q, action)
+            prompts.append(toks)
+            hits.append(hit)
         result = self.engine.generate(prompts,
                                       max_new_tokens=self.max_new_tokens)
         n_out = result.tokens.shape[1]
-        return [ActionOutcome(
-            qid=q.qid, action=action.idx, correct=False, refused=False,
-            hallucinated=not q.answerable,
-            cost_tokens=float(len(prompts[i]) + n_out), hit=hits[i],
-            answerable=q.answerable, answer=f"<{n_out} generated tokens>")
-            for i, q in enumerate(questions)]
+        return [self._generated_outcome(q, action, len(prompts[i]), n_out,
+                                        hits[i])
+                for i, q in enumerate(questions)]
+
+
+class ContinuousEngineBackend(EngineBackend):
+    """Cross-bucket in-flight serving over the continuous engine.
+
+    ``execute_mixed`` takes the whole routed micro-batch — one action
+    per request — and submits every non-refuse request into the shared
+    slot pool before a single ``run()`` drains them together.  The
+    Gateway prefers this entry point when the backend provides it, so
+    action buckets never execute serially.  Construction is inherited
+    from :class:`EngineBackend`; ``engine`` must be a
+    :class:`~repro.serving.continuous.ContinuousEngine` whose
+    ``max_len`` >= ``max_prompt_len + max_new_tokens``.
+    """
+
+    def execute_mixed(self, questions: Sequence[Question],
+                      actions: Sequence[Action]) -> List[ActionOutcome]:
+        outcomes: List[ActionOutcome] = [None] * len(questions)
+        submitted = {}   # rid -> (position, question, action, hit, plen)
+        for i, (q, action) in enumerate(zip(questions, actions)):
+            if action.mode == "refuse":
+                outcomes[i] = self._refusal_outcome(q, action)
+                continue
+            toks, hit = self._prep(q, action)
+            rid = self.engine.reserve_rid()
+            self.engine.submit(rid, toks, self.max_new_tokens)
+            submitted[rid] = (i, q, action, hit, len(toks))
+        if submitted:
+            done = self.engine.run()
+            for rid, (i, q, action, hit, plen) in submitted.items():
+                gen = done[rid]
+                outcomes[i] = self._generated_outcome(q, action, plen,
+                                                      gen.n_steps, hit)
+        return outcomes
+
+    def execute_batch(self, questions: Sequence[Question],
+                      action: Action) -> List[ActionOutcome]:
+        # single-bucket fallback routes through the same shared stream
+        return self.execute_mixed(questions, [action] * len(questions))

@@ -16,9 +16,9 @@ here rather than in N copies of the loop.
 from __future__ import annotations
 
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -48,7 +48,9 @@ class GatewayStats:
     total_reward: float = 0.0
     action_counts: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
     refusal_cap_history: List[float] = field(default_factory=list)
-    decisions: List[RoutingDecision] = field(default_factory=list)
+    # bounded ring of recent decisions (O(1) trim in long runs)
+    decisions: Deque[RoutingDecision] = field(
+        default_factory=lambda: deque(maxlen=256))
 
     @property
     def avg_reward(self) -> float:
@@ -102,6 +104,28 @@ class Gateway:
         slos = [r.slo for r in batch]
         return self.policy.route(states, slos, ctx), cap
 
+    def _account(self, r: Request, a: int, out, lat_ms: float) -> None:
+        """Reward + error-budget bookkeeping for one served request."""
+        action = self.space[a]
+        profile = get_slo_profile(r.slo)
+        rew = reward(profile, correct=out.correct,
+                     cost_tokens=out.cost_tokens,
+                     hallucinated=out.hallucinated,
+                     refused=out.refused,
+                     answerable=out.answerable,
+                     pre_retrieval=(a == self.space.refuse_action))
+        outcome = RequestOutcome(
+            qid=r.qid, action=a, correct=out.correct,
+            refused=out.refused, hallucinated=out.hallucinated,
+            cost_tokens=out.cost_tokens,
+            answerable=out.answerable, latency_ms=lat_ms)
+        self.budget.record(outcome)
+        self.stats.served += 1
+        self.stats.total_reward += rew
+        self.stats.action_counts[a] += 1
+        if self.on_outcome is not None:
+            self.on_outcome(r, action, out, rew)
+
     def step(self) -> Optional[GatewayStats]:
         """Serve one micro-batch off the queue."""
         if not self.queue:
@@ -115,11 +139,22 @@ class Gateway:
         if cap is not None and "refusal_cap" in decision.constraints:
             self.stats.refusal_cap_history.append(cap)
         self.stats.decisions.append(decision)
-        if len(self.stats.decisions) > 256:   # bound memory in long runs
-            del self.stats.decisions[0]
+
+        if hasattr(self.backend, "execute_mixed"):
+            # continuous backend: the whole routed micro-batch — every
+            # action bucket — feeds one shared in-flight decode stream
+            acts = [int(a) for a in decision.actions]
+            t0 = time.time()
+            outs = self.backend.execute_mixed(
+                [r.question for r in batch],
+                [self.space[a] for a in acts])
+            lat_ms = (time.time() - t0) * 1e3 / max(len(batch), 1)
+            for r, a, out in zip(batch, acts, outs):
+                self._account(r, a, out, lat_ms)
+            return self.stats
 
         # bucket by action so each retrieval depth / generation mode
-        # runs as one batched backend call
+        # runs as one batched backend call (serial across buckets)
         buckets: Dict[int, List[int]] = defaultdict(list)
         for i, a in enumerate(decision.actions):
             buckets[int(a)].append(i)
@@ -131,25 +166,7 @@ class Gateway:
                 [batch[i].question for i in idxs], action)
             lat_ms = (time.time() - t0) * 1e3 / max(len(idxs), 1)
             for i, out in zip(idxs, outs):
-                r = batch[i]
-                profile = get_slo_profile(r.slo)
-                rew = reward(profile, correct=out.correct,
-                             cost_tokens=out.cost_tokens,
-                             hallucinated=out.hallucinated,
-                             refused=out.refused,
-                             answerable=out.answerable,
-                             pre_retrieval=(a == self.space.refuse_action))
-                outcome = RequestOutcome(
-                    qid=r.qid, action=a, correct=out.correct,
-                    refused=out.refused, hallucinated=out.hallucinated,
-                    cost_tokens=out.cost_tokens,
-                    answerable=out.answerable, latency_ms=lat_ms)
-                self.budget.record(outcome)
-                self.stats.served += 1
-                self.stats.total_reward += rew
-                self.stats.action_counts[a] += 1
-                if self.on_outcome is not None:
-                    self.on_outcome(r, action, out, rew)
+                self._account(batch[i], a, out, lat_ms)
         return self.stats
 
     def drain(self) -> GatewayStats:

@@ -1,6 +1,34 @@
 """Serving layer: the RAG executor, the unified Gateway facade (see
 ``repro.routing``), the legacy Scheduler wrapper, SLO error budgets,
-and the KV-cache generation engine."""
+and the KV-cache generation engines (padded-bucket and
+continuous-batching).
+
+Engine symbols resolve lazily via module ``__getattr__`` so the engine
+modules only import when actually used.
+"""
+from __future__ import annotations
+
+import importlib
+
 from repro.serving.pipeline import RAGPipeline, ActionOutcome
 
-__all__ = ["RAGPipeline", "ActionOutcome"]
+_LAZY = {
+    "Engine": "repro.serving.engine",
+    "GenerationResult": "repro.serving.engine",
+    "ContinuousEngine": "repro.serving.continuous",
+    "CompletedGeneration": "repro.serving.continuous",
+    "EngineStats": "repro.serving.continuous",
+}
+
+__all__ = ["RAGPipeline", "ActionOutcome", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

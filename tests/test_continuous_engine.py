@@ -1,0 +1,237 @@
+"""Continuous-batching engine: greedy parity with the padded engine,
+slot reuse under admission pressure, one-allocation lifetime invariant,
+and cross-bucket in-flight serving through the Gateway."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import EOS
+from repro.models import build_model
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Engine
+
+
+def _trim(row):
+    row = list(int(t) for t in row)
+    return row[:row.index(EOS) + 1] if EOS in row else row
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, plen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(4, cfg.vocab_size, size=plen)) for _ in range(n)]
+
+
+@pytest.mark.parametrize("prefill_batch", [1, 3])
+def test_greedy_parity_with_padded_engine(qwen, prefill_batch):
+    """Token-identical greedy outputs vs the padded-bucket Engine for
+    the same (equal-length) prompts — per request, trimmed at its EOS,
+    with both single-row and batched prefill admission."""
+    cfg, model, params = qwen
+    prompts = _prompts(cfg, 5, 10)
+    old = Engine(model, params, max_len=64)
+    res = old.generate(prompts, max_new_tokens=12)
+    # fewer slots than requests: the 4th/5th prompts are admitted
+    # mid-stream into freed slots, outputs must not change
+    ce = ContinuousEngine(model, params, num_slots=3, max_len=64,
+                          max_new_cap=16, sync_every=4,
+                          prefill_batch=prefill_batch)
+    outs = ce.generate_many(prompts, max_new_tokens=12)
+    for i in range(len(prompts)):
+        assert _trim(res.tokens[i]) == _trim(outs[i].tokens), i
+    assert ce.stats.max_concurrent == 3
+    assert ce.stats.n_admitted == 5
+
+
+def test_one_cache_allocation_per_lifetime(qwen):
+    """The slot cache (and the prefill scratch) are allocated at
+    construction and never again — serving more requests, across
+    multiple run() waves, must not call init_cache."""
+    cfg, model, params = qwen
+    calls = []
+    orig = model.init_cache
+
+    class Counting:
+        def __getattr__(self, name):
+            return getattr(model, name)
+
+        def init_cache(self, batch, max_len):
+            calls.append((batch, max_len))
+            return orig(batch, max_len)
+
+    ce = ContinuousEngine(Counting(), params, num_slots=2, max_len=48,
+                          max_new_cap=8, sync_every=2)
+    n_construction = len(calls)
+    assert n_construction == 2  # slot cache + single-row prefill scratch
+    for wave in range(2):
+        ce.generate_many(_prompts(cfg, 3, 8, seed=wave), max_new_tokens=6)
+    assert len(calls) == n_construction
+    assert ce.stats.cache_allocations == 2
+    assert ce.stats.n_completed == 6
+
+
+def test_immediate_finish_and_limit_one(qwen):
+    """max_new_tokens=1 requests finish at prefill and free their slot
+    without entering the decode loop."""
+    cfg, model, params = qwen
+    ce = ContinuousEngine(model, params, num_slots=2, max_len=32,
+                          max_new_cap=8)
+    outs = ce.generate_many(_prompts(cfg, 3, 6), max_new_tokens=1)
+    assert [o.n_steps for o in outs] == [1, 1, 1]
+    assert ce.stats.n_decode_chunks == 0
+    assert ce.stats.n_completed == 3
+
+
+def test_submit_rejects_overflow(qwen):
+    cfg, model, params = qwen
+    ce = ContinuousEngine(model, params, num_slots=1, max_len=16,
+                          max_new_cap=8)
+    with pytest.raises(ValueError):
+        ce.submit(0, list(range(4, 16)), max_new_tokens=8)
+    with pytest.raises(ValueError):
+        ce.submit(1, [], max_new_tokens=2)
+
+
+def test_interleaved_waves_keep_results_separate(qwen):
+    """run() returns only the requests completed since the last call."""
+    cfg, model, params = qwen
+    ce = ContinuousEngine(model, params, num_slots=2, max_len=48,
+                          max_new_cap=8)
+    a = ce.generate_many(_prompts(cfg, 2, 8, seed=1), max_new_tokens=4)
+    b = ce.generate_many(_prompts(cfg, 2, 8, seed=2), max_new_tokens=4)
+    assert {o.rid for o in a}.isdisjoint({o.rid for o in b})
+
+
+# --- Gateway integration ----------------------------------------------------
+
+
+class _RoundRobinPolicy:
+    """Deterministic mixed-action router (cycles the whole space)."""
+
+    def route(self, states, slo, context):
+        from repro.routing.policy import RoutingDecision
+        acts = np.arange(states.shape[0]) % 5
+        return RoutingDecision(actions=acts.astype(np.int64))
+
+
+@pytest.fixture(scope="module")
+def small_testbed():
+    from repro.core.config import RouterConfig, TestbedConfig
+    from repro.core.offline_log import build_testbed
+    cfg = TestbedConfig(n_train=40, n_eval=16, n_paragraphs=60,
+                        router=RouterConfig(n_epochs=1))
+    return cfg, build_testbed(cfg)
+
+
+def test_gateway_mixed_stream_shares_inflight_batch(qwen, small_testbed):
+    """A mixed quality_first/cheap stream routed across all 5 actions
+    serves through ONE shared in-flight batch: more requests concurrent
+    than any single action bucket, and zero cache reallocation."""
+    from repro.data.tokenizer import HashTokenizer
+    from repro.routing import ContinuousEngineBackend, Gateway, Request
+
+    mcfg, model, params = qwen
+    tcfg, (data, index, pipe, train_log, eval_log) = small_testbed
+    engine = ContinuousEngine(model, params, num_slots=8, max_len=160,
+                              max_new_cap=8, sync_every=4)
+    backend = ContinuousEngineBackend(
+        engine, HashTokenizer(mcfg.vocab_size), index,
+        max_prompt_len=128, max_new_tokens=4)
+    gw = Gateway(_RoundRobinPolicy(), backend, router_cfg=tcfg.router,
+                 index=index, max_batch=10, adaptive_refusal=False)
+    reqs = [Request(qid=q.qid, question=q,
+                    slo=("cheap" if i % 2 else "quality_first"))
+            for i, q in enumerate(data.questions[:10])]
+    stats = gw.serve(reqs)
+
+    assert stats.served == 10
+    # every action bucket was routed (2 requests each incl. refuse)
+    assert dict(stats.action_counts) == {a: 2 for a in range(5)}
+    # 8 generating requests (refusals short-circuit) with at most 2 per
+    # bucket — the 8 concurrent slots prove cross-bucket interleaving
+    assert engine.stats.max_concurrent == 8
+    assert engine.stats.n_admitted == 8
+    # one engine lifetime, one slot-cache allocation (+ prefill scratch)
+    assert engine.stats.cache_allocations == 2
+    # refusals never reached the engine
+    assert stats.action_counts[4] == 2 and engine.stats.n_completed == 8
+
+
+def test_continuous_backend_outcomes_match_bucketed_accounting(qwen,
+                                                               small_testbed):
+    """execute_mixed produces the same outcome structure (refusal cost,
+    hallucination flags, per-request token accounting) as the padded
+    backend's bucketed path."""
+    from repro.data.tokenizer import HashTokenizer
+    from repro.routing import ContinuousEngineBackend, EngineBackend
+    from repro.routing.registry import get_action_space
+
+    mcfg, model, params = qwen
+    tcfg, (data, index, *_rest) = small_testbed
+    space = get_action_space()
+    tok = HashTokenizer(mcfg.vocab_size)
+    qs = data.questions[:4]
+
+    cont = ContinuousEngineBackend(
+        ContinuousEngine(model, params, num_slots=4, max_len=160,
+                         max_new_cap=4),
+        tok, index, max_prompt_len=128, max_new_tokens=4)
+    padded = EngineBackend(Engine(model, params, max_len=160), tok, index,
+                           max_prompt_len=128, max_new_tokens=4)
+
+    for action in (space[1], space[4]):          # guarded k=5, refuse
+        a = cont.execute_batch(qs, action)
+        b = padded.execute_batch(qs, action)
+        for oa, ob in zip(a, b):
+            assert oa.qid == ob.qid and oa.action == ob.action
+            assert oa.refused == ob.refused
+            assert oa.hallucinated == ob.hallucinated
+            assert oa.cost_tokens == ob.cost_tokens
+
+
+@pytest.mark.slow
+def test_gateway_trained_policy_end_to_end(small_testbed):
+    """End-to-end: trained MLP policy + continuous backend over a
+    40-request mixed-SLO stream (multiple micro-batches, slot reuse
+    across Gateway.step calls)."""
+    from repro.core.actions import SLO_PROFILES
+    from repro.core.policy import train_policy
+    from repro.data.tokenizer import HashTokenizer
+    from repro.routing import ContinuousEngineBackend, Gateway, MLPPolicy, \
+        Request
+
+    cfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg, (data, index, pipe, train_log, eval_log) = small_testbed
+    tr = train_policy(train_log,
+                      train_log.rewards(SLO_PROFILES["quality_first"]),
+                      tcfg.router, objective="argmax_ce")
+    engine = ContinuousEngine(model, params, num_slots=6, max_len=256,
+                              max_new_cap=8, sync_every=4)
+    backend = ContinuousEngineBackend(
+        engine, HashTokenizer(cfg.vocab_size), index,
+        max_prompt_len=192, max_new_tokens=6)
+    gw = Gateway(MLPPolicy(tr.params, tcfg.router), backend,
+                 router_cfg=tcfg.router, index=index, max_batch=16,
+                 adaptive_refusal=True, base_refusal_share=0.5)
+    reqs = [Request(qid=q.qid, question=q,
+                    slo=("cheap" if i % 2 else "quality_first"))
+            for i, q in enumerate(data.questions[:40])]
+    stats = gw.serve(reqs)
+    assert stats.served == 40
+    assert engine.stats.cache_allocations == 2
+    assert np.isfinite(stats.avg_reward)
+    assert engine.stats.n_completed == engine.stats.n_admitted
