@@ -16,7 +16,7 @@ from benchmarks import (conditioned_policy, fig1_action_dist,
                         fig2_cost_quality, fig3_reward, kernels_bench,
                         mitigation, objectives_ablation, ope, pareto_sweep,
                         perf_variants, roofline, seeds_ablation,
-                        table1_slo_grid)
+                        serving_bench, table1_slo_grid)
 
 BENCHMARKS = {
     "table1": table1_slo_grid.main,     # paper Table 1
@@ -30,6 +30,9 @@ BENCHMARKS = {
     "pareto": pareto_sweep.main,        # beyond paper: collapse onset
     "seeds": seeds_ablation.main,       # beyond paper: §8 uncertainty
     "kernels": kernels_bench.main,      # kernel micro-bench
+    "serving": serving_bench.main,      # padded vs continuous vs sharded
+                                        # engines (writes BENCH_serving.json
+                                        # at repo root + artifacts/)
     "roofline": roofline.main,          # §Roofline table
     "perf": perf_variants.main,         # §Perf before/after from records
 }

@@ -28,15 +28,31 @@ workload start (padded requests inherit their bucket's serial position
 and its longest member — head-of-line blocking the continuous engine
 does not have).
 
-Writes ``benchmarks/artifacts/BENCH_serving.json``.
+A third engine variant, **continuous_sharded**, runs the same workload
+through the slot-sharded ``ShardedExecutor`` on a 1-device mesh (the
+mesh axis shows executor overhead, not parallel speedup, on this host)
+— its decode tokens/s lands next to the single-device executor's in the
+artifact.  A forced-8-host-device probe (``--mesh dp=8``, subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) checks the
+sharded path's token parity on the mixed-action workload and reports
+its throughput; host devices share the same CPU, so the probe is a
+correctness smoke, not a speedup claim.
 
-    PYTHONPATH=src:. python benchmarks/serving_bench.py
+Writes ``benchmarks/artifacts/BENCH_serving.json`` AND repo-root
+``BENCH_serving.json`` (the perf-trajectory file).
+
+    PYTHONPATH=src:. python benchmarks/serving_bench.py [--mesh dp=8]
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 from collections import defaultdict
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -141,7 +157,81 @@ def run_continuous(engine, workload, prefill_only=False):
     return useful, time.time() - t0, lat
 
 
-def main() -> dict:
+def _one_device_mesh():
+    """A 1-device ("data","model") mesh regardless of host flags."""
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def _sharded_probe(mesh_spec: str) -> dict:
+    """Re-exec this benchmark in a subprocess with N forced host
+    devices: token parity (single-device vs slot-sharded executor) on
+    the mixed-action workload, plus the sharded decode throughput."""
+    dp = int(dict(kv.split("=") for kv in mesh_spec.split(","))["dp"])
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={dp}",
+               PYTHONPATH=f"{root / 'src'}:{root}")
+    res = subprocess.run(
+        [sys.executable, __file__, "--probe", mesh_spec],
+        env=env, capture_output=True, text=True, timeout=1200)
+    for line in res.stdout.splitlines():
+        if line.startswith("PROBE_JSON:"):
+            return json.loads(line[len("PROBE_JSON:"):])
+    return {"mesh": mesh_spec, "error": (res.stderr or res.stdout)[-800:]}
+
+
+def probe_main(mesh_spec: str) -> None:
+    """Subprocess body (XLA_FLAGS already set before jax imported)."""
+    from repro.data.tokenizer import trim_at_eos as trim
+    from repro.launch.mesh import make_serving_mesh
+
+    mesh = make_serving_mesh(mesh_spec)
+    ndev = len(jax.devices())
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = build_workload()[:2 * ndev]
+    slots = ndev
+
+    outs = {}
+    for name, mesh_arg in (("single", None), ("sharded", mesh)):
+        eng = ContinuousEngine(model, params, num_slots=slots,
+                               max_len=MAX_LEN, max_new_cap=MAX_NEW,
+                               sync_every=SYNC_EVERY, prefill_batch=slots,
+                               mesh=mesh_arg)
+        tokens = []
+        walls = []
+        for trial in range(2):            # trial 0 = compile warmup
+            rids = []
+            t0 = time.time()
+            for prompt, _, n in workload:
+                rid = eng.reserve_rid()
+                eng.submit(rid, prompt, n)
+                rids.append(rid)
+            done = eng.run()
+            walls.append(time.time() - t0)
+            tokens = [trim(done[r].tokens) for r in rids]
+        outs[name] = {"tokens": tokens, "wall_s": walls[-1],
+                      "useful": sum(len(t) for t in tokens),
+                      "allocations": eng.stats.cache_allocations}
+    parity = outs["single"]["tokens"] == outs["sharded"]["tokens"]
+    report = {
+        "mesh": mesh_spec, "devices": ndev, "n_requests": len(workload),
+        "num_slots": slots, "token_parity": bool(parity),
+        "cache_allocations": outs["sharded"]["allocations"],
+        "sharded_tokens_per_s": round(
+            outs["sharded"]["useful"] / outs["sharded"]["wall_s"], 1),
+        "single_tokens_per_s": round(
+            outs["single"]["useful"] / outs["single"]["wall_s"], 1),
+    }
+    assert parity, "sharded executor diverged from single-device greedy"
+    print("PROBE_JSON:" + json.dumps(report))
+
+
+def main(mesh_probe: str = "dp=8") -> dict:
     mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
                                dtype="float32")
     model = build_model(mcfg)
@@ -161,8 +251,13 @@ def main() -> dict:
             model, params, num_slots=NUM_SLOTS, max_len=MAX_LEN,
             max_new_cap=MAX_NEW, sync_every=SYNC_EVERY,
             prefill_batch=NUM_SLOTS),
+        "continuous_sharded": ContinuousEngine(
+            model, params, num_slots=NUM_SLOTS, max_len=MAX_LEN,
+            max_new_cap=MAX_NEW, sync_every=SYNC_EVERY,
+            prefill_batch=NUM_SLOTS, mesh=_one_device_mesh()),
     }
-    runners = (("padded", run_padded), ("continuous", run_continuous))
+    runners = (("padded", run_padded), ("continuous", run_continuous),
+               ("continuous_sharded", run_continuous))
     best = {}
     for name, runner in runners:
         runner(engines[name], workload)                # warmup (compile)
@@ -206,12 +301,38 @@ def main() -> dict:
     out["latency_mean_speedup"] = round(
         out["padded"]["latency_ms_mean"]
         / out["continuous"]["latency_ms_mean"], 2)
+    # sharded-on-1-device-mesh vs single-device executor: the mesh
+    # machinery (NamedSharding layouts, out_shardings jits) must not
+    # regress decode throughput
+    out["sharded_1dev_decode_ratio"] = round(
+        out["continuous_sharded"]["decode_tokens_per_s"]
+        / out["continuous"]["decode_tokens_per_s"], 2)
     print(f"decode speedup: {out['decode_speedup']}x; "
           f"end-to-end: {out['e2e_speedup']}x; "
-          f"mean latency: {out['latency_mean_speedup']}x lower")
+          f"mean latency: {out['latency_mean_speedup']}x lower; "
+          f"sharded/single decode on 1-dev mesh: "
+          f"{out['sharded_1dev_decode_ratio']}x")
+    if mesh_probe:
+        print(f"# forced-device sharded probe ({mesh_probe}) ...")
+        out["sharded_probe"] = _sharded_probe(mesh_probe)
+        print("probe:", out["sharded_probe"])
     save_artifact("BENCH_serving", out)
-    return {"decode_speedup": out["decode_speedup"]}
+    # the repo-root copy is the perf-trajectory entry point
+    (Path(__file__).resolve().parents[1] / "BENCH_serving.json").write_text(
+        json.dumps(out, indent=1))
+    return {"decode_speedup": out["decode_speedup"],
+            "sharded_1dev_decode_ratio": out["sharded_1dev_decode_ratio"]}
 
 
 if __name__ == "__main__":
-    print(main())
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="dp=8", metavar="dp=N",
+                    help="forced-host-device count for the sharded probe "
+                         "(empty string skips the probe)")
+    ap.add_argument("--probe", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.probe:
+        probe_main(args.probe)
+    else:
+        print(main(mesh_probe=args.mesh))

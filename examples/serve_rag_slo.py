@@ -42,7 +42,14 @@ def main():
                     choices=("continuous", "padded"),
                     help="continuous = slot-based shared decode stream; "
                          "padded = legacy serial per-bucket engine")
+    ap.add_argument("--mesh", default=None, metavar="dp=N[,mp=M]",
+                    help="shard the continuous engine's slot dimension "
+                         "over a device mesh (dp=N slots-on-data; pair "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N on a CPU host)")
     args = ap.parse_args()
+    if args.mesh and args.engine != "continuous":
+        ap.error("--mesh requires --engine continuous")
     profile = get_slo_profile(args.slo)
 
     print("# building testbed + routing policy ...")
@@ -61,10 +68,16 @@ def main():
     max_prompt_len = 384
     max_len = max_prompt_len + args.max_new_tokens
     if args.engine == "continuous":
+        mesh = None
+        if args.mesh:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(args.mesh)
+            print(f"# slot-sharded executor over mesh {args.mesh} "
+                  f"({len(jax.devices())} devices)")
         engine = ContinuousEngine(model, params, num_slots=args.batch,
                                   max_len=max_len,
                                   max_new_cap=args.max_new_tokens,
-                                  prefill_batch=args.batch)
+                                  prefill_batch=args.batch, mesh=mesh)
         backend_cls = ContinuousEngineBackend
     else:
         engine = Engine(model, params, max_len=max_len)

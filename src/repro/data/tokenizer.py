@@ -21,6 +21,18 @@ def words(text: str) -> List[str]:
     return _WORD_RE.findall(text.lower())
 
 
+def trim_at_eos(tokens) -> List[int]:
+    """Token list truncated at the first EOS (inclusive) — the shared
+    definition of a generation's useful tokens (parity tests, serving
+    benchmarks)."""
+    out: List[int] = []
+    for t in tokens:
+        out.append(int(t))
+        if out[-1] == EOS:
+            break
+    return out
+
+
 def _h(word: str, mod: int) -> int:
     d = hashlib.blake2s(word.encode(), digest_size=8).digest()
     return int.from_bytes(d, "little") % mod

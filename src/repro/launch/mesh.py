@@ -24,3 +24,27 @@ def make_local_mesh():
     """Single-host mesh for smoke tests / examples (1 device)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_serving_mesh(spec: str):
+    """Parse a ``dp=N[,mp=M]`` flag into a ``("data", "model")`` mesh.
+
+    The serving executors shard the continuous engine's slot dimension
+    over the ``data`` axis; ``mp`` defaults to 1 (params replicated).
+    ``dp * mp`` must equal the visible device count — use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to test
+    multi-device layouts on a CPU host.
+    """
+    parts = dict(kv.split("=", 1) for kv in spec.split(",") if kv)
+    unknown = set(parts) - {"dp", "mp"}
+    if unknown:
+        raise ValueError(f"unknown mesh axes {sorted(unknown)} in {spec!r} "
+                         "(expected dp=N[,mp=M])")
+    dp = int(parts.get("dp", 1))
+    mp = int(parts.get("mp", 1))
+    n = len(jax.devices())
+    if dp * mp != n:
+        raise ValueError(
+            f"mesh {spec!r} needs {dp * mp} devices but {n} are visible "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.make_mesh((dp, mp), ("data", "model"))

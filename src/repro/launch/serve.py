@@ -1,11 +1,19 @@
 """Serving driver: the full SLO-routed RAG service loop via the Gateway.
 
-Builds the paper testbed (corpus, BM25 index, simulator backend),
-trains a routing policy, then serves queries end-to-end through the
-unified routing API: Gateway -> RoutingPolicy.route -> action-bucketed
+Builds the paper testbed (corpus, BM25 index), trains a routing
+policy, then serves queries end-to-end through the unified routing
+API: Gateway -> RoutingPolicy.route -> action-bucketed
 retrieval/generation -> reward + error-budget accounting.
 
+The generation side is selectable: the default simulator backend (the
+paper's cost model), or ``--backend continuous`` for the real JAX
+continuous-batching engine — optionally slot-sharded over a device
+mesh with ``--mesh dp=N`` (combine with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on a CPU host).
+
     PYTHONPATH=src python -m repro.launch.serve --slo quality_first -n 50
+    PYTHONPATH=src python -m repro.launch.serve --backend continuous \
+        --mesh dp=1 -n 16
 """
 from __future__ import annotations
 
@@ -22,6 +30,26 @@ from repro.routing import (ConstrainedPolicy, Gateway, MLPPolicy, Request,
                            list_slo_profiles)
 
 
+def _continuous_backend(index, mesh_spec, num_slots):
+    """Real-model generation: ContinuousEngine over an optional mesh."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.tokenizer import HashTokenizer
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import build_model
+    from repro.routing import ContinuousEngineBackend
+
+    mcfg = get_config("qwen1.5-32b", "smoke")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
+    return ContinuousEngineBackend.create(
+        model, params, HashTokenizer(mcfg.vocab_size), index,
+        mesh=mesh, num_slots=num_slots, max_prompt_len=192,
+        max_new_tokens=8)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--slo", default="quality_first",
@@ -31,7 +59,18 @@ def main():
     ap.add_argument("--refusal-cap", type=float, default=1.0)
     ap.add_argument("--adaptive", action="store_true",
                     help="enable budget-driven refusal back-pressure")
+    ap.add_argument("--backend", default="simulator",
+                    choices=("simulator", "continuous"),
+                    help="simulator = paper cost model; continuous = real "
+                         "JAX slot-based engine (see --mesh)")
+    ap.add_argument("--mesh", default=None, metavar="dp=N[,mp=M]",
+                    help="shard the continuous engine's slot dimension "
+                         "over a device mesh (requires --backend "
+                         "continuous)")
+    ap.add_argument("--num-slots", type=int, default=8)
     args = ap.parse_args()
+    if args.mesh and args.backend != "continuous":
+        ap.error("--mesh requires --backend continuous")
 
     cfg = TestbedConfig()
     profile = get_slo_profile(args.slo)
@@ -56,7 +95,11 @@ def main():
                   f"(k={action.k},{action.mode:7s}) "
                   f"cost={out.cost_tokens:6.0f} {status}")
 
-    gateway = Gateway(policy, SimulatorBackend(pipe), router_cfg=cfg.router,
+    if args.backend == "continuous":
+        backend = _continuous_backend(index, args.mesh, args.num_slots)
+    else:
+        backend = SimulatorBackend(pipe)
+    gateway = Gateway(policy, backend, router_cfg=cfg.router,
                       index=index, max_batch=16,
                       adaptive_refusal=args.adaptive, on_outcome=report)
 
@@ -67,6 +110,12 @@ def main():
                            for q in eval_q])
     print(f"# served={stats.served} avg_reward={stats.avg_reward:+.4f} "
           f"actions={dict(sorted(stats.action_counts.items()))}")
+    es = gateway.engine_stats
+    if es is not None:
+        print(f"# engine: prefills={es.n_prefills} "
+              f"decode_chunks={es.n_decode_chunks} "
+              f"max_concurrent={es.max_concurrent} "
+              f"cache_allocations={es.cache_allocations}")
     print("# error budgets:", json.dumps(gateway.budget.report(), indent=1))
 
     # offline metrics on the logged sweep for the same routed states

@@ -23,7 +23,7 @@ anyway count as hallucinations), exactly as the old serve driver did.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.data.synthetic_squad import Question
 from repro.data.tokenizer import HashTokenizer
@@ -109,8 +109,37 @@ class ContinuousEngineBackend(EngineBackend):
     action buckets never execute serially.  Construction is inherited
     from :class:`EngineBackend`; ``engine`` must be a
     :class:`~repro.serving.continuous.ContinuousEngine` whose
-    ``max_len`` >= ``max_prompt_len + max_new_tokens``.
+    ``max_len`` >= ``max_prompt_len + max_new_tokens``.  Use
+    :meth:`create` to build engine+backend together with a mesh or an
+    explicit executor choice (single-device vs slot-sharded).
     """
+
+    @classmethod
+    def create(cls, model, params, tokenizer: HashTokenizer,
+               index: BM25Index, *, mesh=None, executor=None,
+               num_slots: int = 8, max_prompt_len: int = 384,
+               max_new_tokens: int = 8, sync_every: int = 4,
+               prefill_batch: Optional[int] = None,
+               **engine_kw) -> "ContinuousEngineBackend":
+        """Build a :class:`~repro.serving.continuous.ContinuousEngine`
+        sized for this backend's prompts and wrap it.
+
+        ``mesh=None`` gives the single-device executor; passing a
+        ``jax.sharding.Mesh`` shards the slot dimension over its data
+        axis (``ShardedExecutor``); an explicit ``executor`` overrides
+        both.  Slot caches hold the padded prompt plus the generation
+        budget (``max_prompt_len + max_new_tokens``).
+        """
+        from repro.serving.continuous import ContinuousEngine
+        engine = ContinuousEngine(
+            model, params, num_slots=num_slots,
+            max_len=max_prompt_len + max_new_tokens,
+            max_new_cap=max_new_tokens, sync_every=sync_every,
+            prefill_batch=(num_slots if prefill_batch is None
+                           else prefill_batch),
+            mesh=mesh, executor=executor, **engine_kw)
+        return cls(engine, tokenizer, index, max_prompt_len=max_prompt_len,
+                   max_new_tokens=max_new_tokens)
 
     def execute_mixed(self, questions: Sequence[Question],
                       actions: Sequence[Action]) -> List[ActionOutcome]:

@@ -11,7 +11,12 @@ live in ``examples/serve_rag_slo.py``.  Anything that implements
 :class:`~repro.routing.policy.RoutingPolicy` plugs in — fixed
 baselines, trained MLPs, the Lagrangian-constrained variant, the
 SLO-conditioned single policy — and sharded/async serving work lands
-here rather than in N copies of the loop.
+here rather than in N copies of the loop.  The execution side is
+equally pluggable: a :class:`~repro.routing.engine_backend.ContinuousEngineBackend`
+built with ``mesh=...`` serves the same mixed-action stream through the
+slot-sharded multi-device executor, with no Gateway change — see
+:attr:`Gateway.engine_stats` for the engine-side counters (decode
+chunks, prefills, concurrency) drivers report alongside routing stats.
 """
 from __future__ import annotations
 
@@ -178,6 +183,15 @@ class Gateway:
         """Convenience: submit + drain."""
         self.submit(reqs)
         return self.drain()
+
+    @property
+    def engine_stats(self):
+        """The backend engine's serving counters (or None for backends
+        without an engine, e.g. the simulator) — decode chunks,
+        prefills, slot concurrency; what serve drivers print alongside
+        routing stats."""
+        engine = getattr(self.backend, "engine", None)
+        return getattr(engine, "stats", None)
 
     @property
     def refusal_share(self) -> float:

@@ -18,6 +18,8 @@ _LAZY = {
     "ContinuousEngine": "repro.serving.continuous",
     "CompletedGeneration": "repro.serving.continuous",
     "EngineStats": "repro.serving.continuous",
+    "SingleDeviceExecutor": "repro.serving.executor",
+    "ShardedExecutor": "repro.serving.executor",
 }
 
 __all__ = ["RAGPipeline", "ActionOutcome", *sorted(_LAZY)]

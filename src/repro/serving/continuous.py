@@ -1,32 +1,38 @@
-"""Continuous-batching decode engine: slot-based KV cache, mid-stream
-admission, K-step jitted decode chunks.
+"""Continuous-batching serving: a device-agnostic host scheduler over a
+pluggable :class:`~repro.serving.executor.DeviceExecutor`.
 
-The padded-bucket :class:`~repro.serving.engine.Engine` allocates a
-fresh KV cache per ``generate`` call, re-traces per ``(B, plen)`` shape,
-and round-trips to host every decode token; each routed action bucket
-runs as its own serial prefill+decode pass, so the decode batch drains
-to nothing before the next bucket starts.  This engine replaces that
-with the standard continuous-batching serving pattern:
+The engine is split into two layers:
 
-* **One slot cache per engine lifetime.**  ``num_slots x max_len`` KV
-  cache allocated once at construction; requests are *admitted* into
-  free slots — up to ``prefill_batch`` equal-length queued prompts are
-  prefilled together through a reusable scratch cache and their rows
-  scattered into their slots (the JetStream prefill->insert pattern,
-  with batched prefill).  No per-call or per-step allocation.
-* **One decode trace.**  A single jitted K-step ``lax.scan`` advances
-  *all* slots together; per-slot positions already live in the cache
-  (``cache["pos"]``), so heterogeneous prompt lengths and admission
-  times decode in the same batch.  Slot state (next token, done-mask,
-  generated counts, output buffer) is device-resident; a sync every
-  ``sync_every`` steps downloads only the two tiny control arrays, and
-  the output buffer moves to host only when a slot finishes — nothing
-  is uploaded per chunk and there is no per-token host round-trip.
-* **Mid-stream admission.**  Finished slots free immediately at the
-  next sync and queued requests are prefilled into them while other
-  slots keep decoding — the batch never drains to serve a new action
-  bucket, which is what lets the Gateway interleave deep-k and
-  shallow-k routed requests in one stream.
+* **Host scheduler** (this module, pure numpy — no JAX import): request
+  queue, admission grouping, slot ownership, host mirrors of the tiny
+  control arrays, and harvest of finished generations.  It talks to the
+  device exclusively through the executor protocol (``admit`` /
+  ``decode_chunk`` / ``sync_control`` / ``fetch_outputs``), so it can be
+  unit-tested with a pure numpy fake executor.
+* **Device executor** (:mod:`repro.serving.executor`): the jitted
+  prefill / fused insert+commit / K-step decode-chunk programs and the
+  once-per-lifetime slot cache.  ``SingleDeviceExecutor`` runs on the
+  default device; ``ShardedExecutor`` lays the slot dimension out over
+  a ``jax.sharding.Mesh`` (slots on the data axis) so the same
+  scheduler drives N devices.
+
+**Prefill/decode overlap.**  Executor calls are async dispatch; the
+scheduler exploits that by dispatching the decode chunk for resident
+slots FIRST, then planning and dispatching the next admission groups'
+prefills while that chunk is in flight, and only then blocking on the
+control-array sync.  Admission therefore no longer stalls the decode
+stream: the prefill program (which touches only the scratch cache)
+overlaps with the chunk, and the insert/commit serializes behind it via
+its data dependency on the slot cache.  Newly admitted slots join the
+next chunk — greedy outputs are row-independent, so outputs are
+token-identical to the serial schedule.
+
+**Admission grouping.**  Up to ``prefill_batch`` queued prompts with
+the same padded length prefill as one dispatch (JetStream's batched
+prefill->insert pattern).  Grouping scans a bounded
+``admission_lookahead`` window of the queue, so one odd-length prompt
+at the head no longer degrades batched prefill to singletons
+(head-of-line blocking); skipped prompts keep their relative order.
 
 Greedy semantics match the padded engine exactly: prefill emits the
 first token (argmax of the last prompt logit), decode feeds the
@@ -41,14 +47,11 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Set
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.data.tokenizer import EOS, PAD
-from repro.models.registry import Model
+from repro.data.tokenizer import PAD
 
 
 @dataclass
@@ -84,132 +87,62 @@ class EngineStats:
 
 
 class ContinuousEngine:
-    """Slot-based continuous-batching greedy decoder."""
+    """Slot-based continuous-batching greedy decoder (host scheduler).
 
-    def __init__(self, model: Model, params, *, num_slots: int = 8,
+    Construct either from ``(model, params)`` — which builds a
+    :class:`~repro.serving.executor.SingleDeviceExecutor`, or a
+    :class:`~repro.serving.executor.ShardedExecutor` when ``mesh`` is
+    given — or from an explicit ``executor`` (any object implementing
+    the executor protocol; the fake in the scheduler tests is numpy).
+    """
+
+    def __init__(self, model=None, params=None, *, num_slots: int = 8,
                  max_len: int = 512, max_new_cap: int = 64,
                  sync_every: int = 4, prefill_pad_multiple: int = 1,
-                 prefill_batch: int = 1,
-                 moe_fn: Optional[Callable] = None,
-                 mla_absorb: bool = False):
+                 prefill_batch: int = 1, admission_lookahead: int = 16,
+                 moe_fn=None, mla_absorb: bool = False,
+                 mesh=None, executor=None):
+        if executor is None:
+            if model is None:
+                raise ValueError("ContinuousEngine needs model+params or "
+                                 "an explicit executor")
+            from repro.serving.executor import (ShardedExecutor,
+                                                SingleDeviceExecutor)
+            kw = dict(num_slots=num_slots, max_len=max_len,
+                      max_new_cap=max_new_cap, sync_every=sync_every,
+                      prefill_batch=prefill_batch, moe_fn=moe_fn,
+                      mla_absorb=mla_absorb)
+            executor = (ShardedExecutor(model, params, mesh=mesh, **kw)
+                        if mesh is not None
+                        else SingleDeviceExecutor(model, params, **kw))
+        self.executor = executor
         self.model = model
         self.params = params
-        self.num_slots = num_slots
-        self.max_len = max_len
-        self.max_new_cap = max_new_cap
-        self.sync_every = sync_every
+        self.num_slots = executor.num_slots
+        self.max_len = executor.max_len
+        self.max_new_cap = executor.max_new_cap
+        self.sync_every = executor.sync_every
+        self.prefill_batch = executor.prefill_batch
         self.prefill_pad_multiple = max(1, prefill_pad_multiple)
-        # admit up to this many equal-length queued prompts per prefill
-        # dispatch (JetStream-style batched prefill); rows are
-        # row-independent, so greedy outputs do not depend on grouping
-        self.prefill_batch = max(1, min(prefill_batch, num_slots))
-        self.moe_fn = moe_fn
-        self.mla_absorb = mla_absorb
+        self.admission_lookahead = max(0, admission_lookahead)
         self.stats = EngineStats()
+        self.stats.cache_allocations = executor.cache_allocations
 
-        # the ONLY cache allocations in the engine's lifetime: the slot
-        # cache and the prefill scratch (both reused forever)
-        self._cache = model.init_cache(num_slots, max_len)
-        self._pcache = model.init_cache(self.prefill_batch, max_len)
-        self.stats.cache_allocations = 2
-
-        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
-        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
-        self._decode_chunk = jax.jit(self._decode_chunk_fn,
-                                     donate_argnums=(1, 2, 3, 4, 6))
-        self._admit_update = jax.jit(self._admit_update_fn,
-                                     donate_argnums=(0, 1, 2, 3, 4))
-
-        # slot state lives ON DEVICE between chunks — a sync downloads
-        # only the two tiny control arrays (active, gen); the output
-        # buffer is fetched when a slot finishes, and nothing is
-        # uploaded per chunk
-        S, cap = num_slots, max_new_cap
-        self._dtok = jnp.zeros(S, jnp.int32)    # next input token
-        self._dactive = jnp.zeros(S, bool)
-        self._dgen = jnp.zeros(S, jnp.int32)    # tokens generated so far
-        self._dlimit = jnp.zeros(S, jnp.int32)  # per-slot max_new_tokens
-        self._dout = jnp.zeros((S, cap), jnp.int32)
-        # host mirrors for control flow / harvest
+        S = self.num_slots
+        # host mirrors of the device control arrays (refreshed at sync)
         self._active = np.zeros(S, bool)
         self._gen = np.zeros(S, np.int32)
-        self._out = np.zeros((S, cap), np.int32)
         self._plen = np.zeros(S, np.int32)
-        self._rid = [None] * S                  # slot -> request id
+        self._rid: List[Optional[int]] = [None] * S
+        # slots admitted since the last sync: their host mirrors are
+        # stale, so harvest must not touch them until the next sync
+        self._dirty: Set[int] = set()
         self._free: Deque[int] = deque(range(S))
         self._queue: Deque[SlotRequest] = deque()
         self._results: Dict[int, CompletedGeneration] = {}
         self._auto_rid = 0
 
-    # -- jitted bodies -------------------------------------------------
-
-    def _prefill_fn(self, params, pcache, tokens):
-        logits, pcache = self.model.prefill(params, {"tokens": tokens},
-                                            pcache, moe_fn=self.moe_fn,
-                                            mla_absorb=self.mla_absorb)
-        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), pcache
-
-    def _insert_fn(self, cache, pcache, slots):
-        """Scatter the prefilled scratch rows into their slots.
-
-        ``slots`` is (prefill_batch,) int32; unused scratch rows carry
-        slot index ``num_slots`` and are dropped by the scatter."""
-        def ins(bdim):
-            def f(big, small):
-                idx = (slice(None),) * bdim + (slots,)
-                return big.at[idx].set(small.astype(big.dtype),
-                                       mode="drop")
-            return f
-        new = dict(cache)
-        new["pos"] = cache["pos"].at[slots].set(pcache["pos"], mode="drop")
-        # prefix leaves are (B, ...); block leaves are (n_blocks, B, ...)
-        new["prefix"] = jax.tree_util.tree_map(ins(0), cache["prefix"],
-                                               pcache["prefix"])
-        new["blocks"] = jax.tree_util.tree_map(ins(1), cache["blocks"],
-                                               pcache["blocks"])
-        return new
-
-    def _admit_update_fn(self, tok, active, gen, limit, out,
-                         slot_idx, firsts, limits):
-        """Write the prefill results of one admission group into the
-        device slot state (unused rows carry index num_slots -> drop)."""
-        flags = (firsts != EOS) & (limits > 1)
-        tok = tok.at[slot_idx].set(firsts, mode="drop")
-        active = active.at[slot_idx].set(flags, mode="drop")
-        gen = gen.at[slot_idx].set(1, mode="drop")
-        limit = limit.at[slot_idx].set(limits, mode="drop")
-        out = out.at[slot_idx, 0].set(firsts, mode="drop")
-        return tok, active, gen, limit, out
-
-    def _decode_chunk_fn(self, params, cache, tok, active, gen, limit, out):
-        """`sync_every` decode steps over all slots, done-mask on device."""
-        S, cap = out.shape
-        sidx = jnp.arange(S)
-
-        def step(carry, _):
-            cache, tok, active, gen, out = carry
-            pos0 = cache["pos"]
-            inp = jnp.where(active, tok, PAD)
-            logits, cache = self.model.decode(
-                params, {"tokens": inp[:, None]}, cache, moe_fn=self.moe_fn,
-                mla_absorb=self.mla_absorb)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            # hold position for idle slots (their kv write lands one past
-            # their valid length and is masked / overwritten on admit)
-            cache["pos"] = jnp.where(active, cache["pos"], pos0)
-            # idle slots scatter out of bounds -> dropped
-            wr = jnp.where(active, gen, cap)
-            out = out.at[sidx, wr].set(nxt, mode="drop")
-            gen = gen + active.astype(jnp.int32)
-            active = active & (nxt != EOS) & (gen < limit)
-            tok = jnp.where(active, nxt, tok)
-            return (cache, tok, active, gen, out), None
-
-        carry, _ = jax.lax.scan(step, (cache, tok, active, gen, out),
-                                None, length=self.sync_every)
-        return carry
-
-    # -- host driver ---------------------------------------------------
+    # -- submission ----------------------------------------------------
 
     def reserve_rid(self) -> int:
         """Fresh request id, unique for this engine's lifetime."""
@@ -233,17 +166,38 @@ class ContinuousEngine:
         m = self.prefill_pad_multiple
         return ((n + m - 1) // m) * m
 
-    def _admit(self) -> None:
+    # -- admission planning --------------------------------------------
+
+    def _next_group(self) -> List[SlotRequest]:
+        """Pop the next admission group off the queue: the head plus up
+        to ``prefill_batch - 1`` more prompts with the same padded
+        length from a bounded lookahead window (skipped prompts keep
+        their relative queue order)."""
+        cap = min(self.prefill_batch, len(self._free))
+        head = self._queue.popleft()
+        group = [head]
+        if cap > 1 and self.admission_lookahead > 0:
+            plen = self._padded_len(len(head.prompt))
+            picked: List[int] = []
+            for i in range(min(len(self._queue), self.admission_lookahead)):
+                if 1 + len(picked) >= cap:
+                    break
+                if self._padded_len(len(self._queue[i].prompt)) == plen:
+                    picked.append(i)
+            group += [self._queue[i] for i in picked]
+            for i in reversed(picked):
+                del self._queue[i]
+        return group
+
+    def _start_admissions(self) -> None:
+        """Dispatch prefill+insert for every admittable group — async,
+        no host sync; the admitted slots stay ``dirty`` until the next
+        control sync reveals their device state."""
         PB = self.prefill_batch
         while self._free and self._queue:
-            # group up to prefill_batch queued requests with the same
-            # padded prompt length into one prefill dispatch
-            group = [self._queue.popleft()]
-            plen = self._padded_len(len(group[0].prompt))
-            while (len(group) < min(PB, len(self._free)) and self._queue
-                   and self._padded_len(len(self._queue[0].prompt)) == plen):
-                group.append(self._queue.popleft())
+            group = self._next_group()
             slots = [self._free.popleft() for _ in group]
+            plen = self._padded_len(len(group[0].prompt))
             toks = np.full((PB, plen), PAD, np.int32)
             for i, req in enumerate(group):
                 toks[i, :len(req.prompt)] = req.prompt
@@ -252,69 +206,65 @@ class ContinuousEngine:
             slot_idx[:len(group)] = slots
             limits = np.zeros(PB, np.int32)
             limits[:len(group)] = [req.max_new_tokens for req in group]
-            firsts, self._pcache = self._prefill(self.params, self._pcache,
-                                                 jnp.asarray(toks))
-            self._cache = self._insert(self._cache, self._pcache,
-                                       jnp.asarray(slot_idx))
-            (self._dtok, self._dactive, self._dgen, self._dlimit,
-             self._dout) = self._admit_update(
-                self._dtok, self._dactive, self._dgen, self._dlimit,
-                self._dout, jnp.asarray(slot_idx), firsts,
-                jnp.asarray(limits))
-            # the only per-group host sync: the first tokens (to mirror
-            # active/gen for the host-side scheduler)
-            firsts = np.asarray(firsts)
+            self.executor.admit(toks, slot_idx, limits)
             self.stats.n_prefills += 1
-            for i, (req, slot) in enumerate(zip(group, slots)):
+            for req, slot in zip(group, slots):
                 self.stats.n_admitted += 1
                 self._rid[slot] = req.rid
                 self._plen[slot] = plen
-                self._gen[slot] = 1
-                self._active[slot] = (int(firsts[i]) != EOS) and \
-                    (req.max_new_tokens > 1)
+                self._dirty.add(slot)
             n_live = sum(r is not None for r in self._rid)
             self.stats.concurrency_trace.append(n_live)
-            self.stats.max_concurrent = max(self.stats.max_concurrent, n_live)
+            self.stats.max_concurrent = max(self.stats.max_concurrent,
+                                            n_live)
 
-    def _decode_and_sync(self) -> None:
-        (self._cache, self._dtok, self._dactive, self._dgen,
-         self._dout) = self._decode_chunk(
-            self.params, self._cache, self._dtok, self._dactive,
-            self._dgen, self._dlimit, self._dout)
-        # the every-K host sync: only the two tiny control arrays come
-        # back (np.array copies — device views are read-only)
-        self._active = np.array(self._dactive)
-        self._gen = np.array(self._dgen)
-        self.stats.n_decode_chunks += 1
-        self.stats.n_decode_steps += self.sync_every
+    # -- sync + harvest ------------------------------------------------
+
+    def _sync(self) -> None:
+        self._active, self._gen = self.executor.sync_control()
+        self._dirty.clear()
 
     def _harvest(self) -> None:
         done_slots = [s for s in range(self.num_slots)
-                      if self._rid[s] is not None and not self._active[s]]
+                      if self._rid[s] is not None and not self._active[s]
+                      and s not in self._dirty]
         if not done_slots:
             return
         # fetch the output buffer only when something actually finished
-        self._out = np.array(self._dout)
+        out = self.executor.fetch_outputs()
         now = time.time()
         for slot in done_slots:
             n = int(self._gen[slot])
             self._results[self._rid[slot]] = CompletedGeneration(
-                rid=self._rid[slot], tokens=self._out[slot, :n].copy(),
+                rid=self._rid[slot], tokens=out[slot, :n].copy(),
                 n_steps=n, prompt_len=int(self._plen[slot]),
                 finished_at=now)
             self.stats.n_completed += 1
             self._rid[slot] = None
             self._free.append(slot)
 
+    # -- driver --------------------------------------------------------
+
     def run(self) -> Dict[int, CompletedGeneration]:
         """Drain the queue; returns {rid: CompletedGeneration} for every
         request completed since the last call."""
         while self._queue or any(r is not None for r in self._rid):
-            self._admit()
-            self._harvest()          # requests finished at prefill time
+            self._harvest()
             if self._active.any():
-                self._decode_and_sync()
+                # decode chunk first (async), then overlap the next
+                # admission groups' prefills with it; block only at the
+                # control sync
+                self.executor.decode_chunk()
+                self.stats.n_decode_chunks += 1
+                self.stats.n_decode_steps += self.sync_every
+                self._start_admissions()
+                self._sync()
                 self._harvest()
+            else:
+                self._start_admissions()
+                if self._dirty:
+                    self._sync()
+                    self._harvest()
         done, self._results = self._results, {}
         return done
 

@@ -8,15 +8,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.data.tokenizer import EOS
+from repro.data.tokenizer import trim_at_eos as _trim
 from repro.models import build_model
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Engine
-
-
-def _trim(row):
-    row = list(int(t) for t in row)
-    return row[:row.index(EOS) + 1] if EOS in row else row
 
 
 @pytest.fixture(scope="module")

@@ -7,6 +7,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -40,6 +42,7 @@ print("EP-multidevice-OK")
 """
 
 
+@pytest.mark.multidevice
 def test_ep_matches_ragged_on_4x2_mesh():
     root = Path(__file__).resolve().parents[1]
     out = subprocess.run(
