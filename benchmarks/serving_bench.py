@@ -32,16 +32,20 @@ A third engine variant, **continuous_sharded**, runs the same workload
 through the slot-sharded ``ShardedExecutor`` on a 1-device mesh (the
 mesh axis shows executor overhead, not parallel speedup, on this host)
 — its decode tokens/s lands next to the single-device executor's in the
-artifact.  A forced-8-host-device probe (``--mesh dp=8``, subprocess
-with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) checks the
-sharded path's token parity on the mixed-action workload and reports
-its throughput; host devices share the same CPU, so the probe is a
-correctness smoke, not a speedup claim.
+artifact.  Two forced-8-host-device probes (subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) check the
+sharded path's token parity on the mixed-action workload and report
+throughput: ``--mesh dp=8`` (slot data parallel) and the
+**continuous_sharded_mp** engine row (``--mesh-mp dp=4,mp=2``: slots on
+``data`` × params tensor-parallel on ``model``, with the model-axis
+sharding of the params asserted on-device).  Host devices share the
+same CPU, so the probes are correctness smokes, not speedup claims.
 
 Writes ``benchmarks/artifacts/BENCH_serving.json`` AND repo-root
 ``BENCH_serving.json`` (the perf-trajectory file).
 
-    PYTHONPATH=src:. python benchmarks/serving_bench.py [--mesh dp=8]
+    PYTHONPATH=src:. python benchmarks/serving_bench.py \
+        [--mesh dp=8] [--mesh-mp dp=4,mp=2]
 """
 from __future__ import annotations
 
@@ -115,7 +119,7 @@ def run_padded(engine, workload, prefill_only=False):
     prefill+decode `Engine.generate` call.  A bucket decodes to its
     LONGEST member's length; only each request's own `gen_len` tokens
     count as useful."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     useful = 0
     lat = []
     for mb in _micro_batches(workload):
@@ -133,16 +137,17 @@ def run_padded(engine, workload, prefill_only=False):
                 eos = np.nonzero(row == EOS)[0]
                 own = eos[0] + 1 if eos.size else res.n_steps
                 useful += int(min(n, own))
-            done_at = (time.time() - t0) * 1e3
+            done_at = (time.perf_counter() - t0) * 1e3
             lat += [done_at] * len(prompts)  # bucket completes together
-    return useful, time.time() - t0, lat
+    return useful, time.perf_counter() - t0, lat
 
 
 def run_continuous(engine, workload, prefill_only=False):
     """The continuous Gateway model: each micro-batch's action buckets
     all feed the bounded slot pool of ONE engine; finished slots admit
-    queued requests mid-stream."""
-    t0 = time.time()
+    queued requests mid-stream.  (finished_at is the engine's
+    perf_counter timestamp, so t0 shares that clock.)"""
+    t0 = time.perf_counter()
     useful = 0
     lat = []
     for mb in _micro_batches(workload):
@@ -154,7 +159,7 @@ def run_continuous(engine, workload, prefill_only=False):
         done = engine.run()
         useful += sum(done[r].n_steps for r in rids)
         lat += [(done[r].finished_at - t0) * 1e3 for r in rids]
-    return useful, time.time() - t0, lat
+    return useful, time.perf_counter() - t0, lat
 
 
 def _one_device_mesh():
@@ -165,13 +170,16 @@ def _one_device_mesh():
 
 
 def _sharded_probe(mesh_spec: str) -> dict:
-    """Re-exec this benchmark in a subprocess with N forced host
-    devices: token parity (single-device vs slot-sharded executor) on
-    the mixed-action workload, plus the sharded decode throughput."""
-    dp = int(dict(kv.split("=") for kv in mesh_spec.split(","))["dp"])
+    """Re-exec this benchmark in a subprocess with dp*mp forced host
+    devices: token parity (single-device vs sharded executor) on the
+    mixed-action workload, plus the sharded decode throughput (and,
+    with mp>1, an on-device check that params shard on the model
+    axis)."""
+    parts = dict(kv.split("=") for kv in mesh_spec.split(","))
+    ndev = int(parts.get("dp", 1)) * int(parts.get("mp", 1))
     root = Path(__file__).resolve().parents[1]
     env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={dp}",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
                PYTHONPATH=f"{root / 'src'}:{root}")
     res = subprocess.run(
         [sys.executable, __file__, "--probe", mesh_spec],
@@ -186,11 +194,13 @@ def probe_main(mesh_spec: str) -> None:
     """Subprocess body (XLA_FLAGS already set before jax imported)."""
     from repro.data.tokenizer import trim_at_eos as trim
     from repro.launch.mesh import make_serving_mesh
+    from repro.sharding import mesh_axis_sizes, model_axis_fallbacks
 
-    mesh = make_serving_mesh(mesh_spec)
-    ndev = len(jax.devices())
     mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
                                dtype="float32")
+    mesh = make_serving_mesh(mesh_spec, model_cfg=mcfg)
+    ndev = len(jax.devices())
+    mp = mesh_axis_sizes(mesh)["model"]
     model = build_model(mcfg)
     params = model.init(jax.random.PRNGKey(0))
     workload = build_workload()[:2 * ndev]
@@ -206,21 +216,36 @@ def probe_main(mesh_spec: str) -> None:
         walls = []
         for trial in range(2):            # trial 0 = compile warmup
             rids = []
-            t0 = time.time()
+            t0 = time.perf_counter()
             for prompt, _, n in workload:
                 rid = eng.reserve_rid()
                 eng.submit(rid, prompt, n)
                 rids.append(rid)
             done = eng.run()
-            walls.append(time.time() - t0)
+            walls.append(time.perf_counter() - t0)
             tokens = [trim(done[r].tokens) for r in rids]
+        if mesh_arg is not None and mp > 1:
+            # params must be PARTITIONED on the model axis, not
+            # replicated per device (the mp>1 silent-replication bug):
+            # on-device shard-shape check on one tensor, resolver audit
+            # over the whole schema
+            wq = eng.executor.params["blocks"]["p0"]["attn"]["wq"]
+            shapes = {s.data.shape for s in wq.addressable_shards}
+            want_heads = mcfg.n_heads // mp
+            assert all(sh[-2] == want_heads for sh in shapes), (
+                mesh_spec, shapes)
+            _, fallbacks = model_axis_fallbacks(model.schema, mesh)
+            assert not fallbacks, fallbacks
         outs[name] = {"tokens": tokens, "wall_s": walls[-1],
                       "useful": sum(len(t) for t in tokens),
                       "allocations": eng.stats.cache_allocations}
     parity = outs["single"]["tokens"] == outs["sharded"]["tokens"]
+    # measured, not assumed: true only when mp>1 AND the asserts above
+    # confirmed every model-capable leaf actually partitioned
     report = {
         "mesh": mesh_spec, "devices": ndev, "n_requests": len(workload),
         "num_slots": slots, "token_parity": bool(parity),
+        "params_model_sharded": mp > 1,
         "cache_allocations": outs["sharded"]["allocations"],
         "sharded_tokens_per_s": round(
             outs["sharded"]["useful"] / outs["sharded"]["wall_s"], 1),
@@ -231,7 +256,7 @@ def probe_main(mesh_spec: str) -> None:
     print("PROBE_JSON:" + json.dumps(report))
 
 
-def main(mesh_probe: str = "dp=8") -> dict:
+def main(mesh_probe: str = "dp=8", mp_probe: str = "dp=4,mp=2") -> dict:
     mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
                                dtype="float32")
     model = build_model(mcfg)
@@ -316,6 +341,12 @@ def main(mesh_probe: str = "dp=8") -> dict:
         print(f"# forced-device sharded probe ({mesh_probe}) ...")
         out["sharded_probe"] = _sharded_probe(mesh_probe)
         print("probe:", out["sharded_probe"])
+    if mp_probe:
+        # the dp×mp tensor-parallel engine row: greedy parity + params
+        # verifiably partitioned on the model axis (forced 8 devices)
+        print(f"# forced-device tensor-parallel probe ({mp_probe}) ...")
+        out["continuous_sharded_mp"] = _sharded_probe(mp_probe)
+        print("probe:", out["continuous_sharded_mp"])
     save_artifact("BENCH_serving", out)
     # the repo-root copy is the perf-trajectory entry point
     (Path(__file__).resolve().parents[1] / "BENCH_serving.json").write_text(
@@ -330,9 +361,13 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", default="dp=8", metavar="dp=N",
                     help="forced-host-device count for the sharded probe "
                          "(empty string skips the probe)")
+    ap.add_argument("--mesh-mp", default="dp=4,mp=2", metavar="dp=N,mp=M",
+                    help="dp×mp tensor-parallel probe — writes the "
+                         "continuous_sharded_mp engine row (empty string "
+                         "skips it)")
     ap.add_argument("--probe", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.probe:
         probe_main(args.probe)
     else:
-        print(main(mesh_probe=args.mesh))
+        print(main(mesh_probe=args.mesh, mp_probe=args.mesh_mp))

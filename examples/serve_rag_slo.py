@@ -43,10 +43,11 @@ def main():
                     help="continuous = slot-based shared decode stream; "
                          "padded = legacy serial per-bucket engine")
     ap.add_argument("--mesh", default=None, metavar="dp=N[,mp=M]",
-                    help="shard the continuous engine's slot dimension "
-                         "over a device mesh (dp=N slots-on-data; pair "
-                         "with XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N on a CPU host)")
+                    help="shard the continuous engine over a device "
+                         "mesh (dp=N slots-on-data, mp=M params "
+                         "tensor-parallel on the model axis; pair with "
+                         "XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N*M on a CPU host)")
     args = ap.parse_args()
     if args.mesh and args.engine != "continuous":
         ap.error("--mesh requires --engine continuous")
@@ -71,9 +72,10 @@ def main():
         mesh = None
         if args.mesh:
             from repro.launch.mesh import make_serving_mesh
-            mesh = make_serving_mesh(args.mesh)
-            print(f"# slot-sharded executor over mesh {args.mesh} "
-                  f"({len(jax.devices())} devices)")
+            mesh = make_serving_mesh(args.mesh, model_cfg=mcfg)
+            print(f"# sharded executor over mesh {args.mesh} "
+                  f"({len(jax.devices())} devices; slots on data, "
+                  f"params on model)")
         engine = ContinuousEngine(model, params, num_slots=args.batch,
                                   max_len=max_len,
                                   max_new_cap=args.max_new_tokens,

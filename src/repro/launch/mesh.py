@@ -26,12 +26,50 @@ def make_local_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
-def make_serving_mesh(spec: str):
+def check_mp_divisibility(model_cfg, mp: int, *, spec: str = "") -> None:
+    """Fail fast when ``mp`` can't partition a model's param schema.
+
+    Runs the REAL sharding resolver (``sharding.model_axis_fallbacks``
+    — divisibility fallbacks included) over the config's schema on a
+    stub ``mp``-wide mesh, so the validation can never diverge from
+    what the executor will actually do.  Leaves that would silently
+    replicate over the ``model`` axis raise ``ValueError`` naming the
+    config and every offending tensor, instead of an opaque XLA
+    sharding failure (or silently burned devices) at first decode.
+    No jax devices are touched — safe to call before mesh creation.
+    """
+    if mp <= 1:
+        return
+    from types import SimpleNamespace
+
+    import numpy as np
+
+    from repro.models.transformer import decoder_param_schema
+    from repro.sharding import model_axis_fallbacks
+
+    stub = SimpleNamespace(axis_names=("data", "model"),
+                           devices=np.empty((1, mp), object))
+    _, fallbacks = model_axis_fallbacks(decoder_param_schema(model_cfg),
+                                        stub)
+    if fallbacks:
+        raise ValueError(
+            f"serving mesh {spec or f'mp={mp}'} cannot tensor-parallel "
+            f"model {model_cfg.name!r}: mp={mp} divides no dim of "
+            f"{', '.join(fallbacks)} — these tensors would silently "
+            "replicate over the model axis; pick an mp that divides "
+            "the model's head/FFN/vocab dims")
+
+
+def make_serving_mesh(spec: str, model_cfg=None):
     """Parse a ``dp=N[,mp=M]`` flag into a ``("data", "model")`` mesh.
 
     The serving executors shard the continuous engine's slot dimension
-    over the ``data`` axis; ``mp`` defaults to 1 (params replicated).
-    ``dp * mp`` must equal the visible device count — use
+    over the ``data`` axis and — with ``mp > 1`` — the model's
+    attention-head / FFN / vocab dims over the ``model`` axis (tensor
+    parallel).  Pass the target ``model_cfg`` to validate up front that
+    ``mp`` divides those dims (:func:`check_mp_divisibility`) instead
+    of silently replicating params.  ``dp * mp`` must equal the
+    visible device count — use
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to test
     multi-device layouts on a CPU host.
     """
@@ -42,6 +80,8 @@ def make_serving_mesh(spec: str):
                          "(expected dp=N[,mp=M])")
     dp = int(parts.get("dp", 1))
     mp = int(parts.get("mp", 1))
+    if model_cfg is not None:
+        check_mp_divisibility(model_cfg, mp, spec=spec)
     n = len(jax.devices())
     if dp * mp != n:
         raise ValueError(

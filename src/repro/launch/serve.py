@@ -7,13 +7,19 @@ retrieval/generation -> reward + error-budget accounting.
 
 The generation side is selectable: the default simulator backend (the
 paper's cost model), or ``--backend continuous`` for the real JAX
-continuous-batching engine — optionally slot-sharded over a device
-mesh with ``--mesh dp=N`` (combine with
-``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on a CPU host).
+continuous-batching engine — optionally sharded over a device mesh
+with ``--mesh dp=N[,mp=M]``: slots partition over the ``dp`` data
+axis, and with ``mp > 1`` the params run tensor-parallel over the
+``mp`` model axis (combine with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N*M`` on a CPU
+host).
 
     PYTHONPATH=src python -m repro.launch.serve --slo quality_first -n 50
     PYTHONPATH=src python -m repro.launch.serve --backend continuous \
         --mesh dp=1 -n 16
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve \
+        --backend continuous --mesh dp=4,mp=2 -n 16
 """
 from __future__ import annotations
 
@@ -43,7 +49,9 @@ def _continuous_backend(index, mesh_spec, num_slots):
     mcfg = get_config("qwen1.5-32b", "smoke")
     model = build_model(mcfg)
     params = model.init(jax.random.PRNGKey(0))
-    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
+    # model_cfg: fail fast if mp doesn't divide the head/FFN dims
+    mesh = (make_serving_mesh(mesh_spec, model_cfg=mcfg)
+            if mesh_spec else None)
     return ContinuousEngineBackend.create(
         model, params, HashTokenizer(mcfg.vocab_size), index,
         mesh=mesh, num_slots=num_slots, max_prompt_len=192,
@@ -64,9 +72,10 @@ def main():
                     help="simulator = paper cost model; continuous = real "
                          "JAX slot-based engine (see --mesh)")
     ap.add_argument("--mesh", default=None, metavar="dp=N[,mp=M]",
-                    help="shard the continuous engine's slot dimension "
-                         "over a device mesh (requires --backend "
-                         "continuous)")
+                    help="shard the continuous engine over a device "
+                         "mesh: slots on the dp (data) axis, params "
+                         "tensor-parallel on the mp (model) axis "
+                         "(requires --backend continuous)")
     ap.add_argument("--num-slots", type=int, default=8)
     args = ap.parse_args()
     if args.mesh and args.backend != "continuous":

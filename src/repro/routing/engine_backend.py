@@ -73,6 +73,23 @@ class EngineBackend:
             hit=False, answerable=q.answerable, answer=REFUSAL_TEXT)
 
     @staticmethod
+    def _rejected_outcome(q: Question, action: Action,
+                          reason: str) -> ActionOutcome:
+        """An engine-rejected request (e.g. over-length prompt):
+        surfaced as a refused outcome so Gateway accounting — reward,
+        error budgets, on_outcome — sees it like any served request
+        and the rest of the stream keeps flowing.  ``rejected=True``
+        marks it as a capacity rejection, not a policy refusal;
+        burning the refusal error budget is intentional (the user
+        didn't get an answer), but Gateway stats count the two apart.
+        """
+        return ActionOutcome(
+            qid=q.qid, action=action.idx, correct=False, refused=True,
+            hallucinated=False, cost_tokens=REFUSE_COST_TOKENS,
+            hit=False, answerable=q.answerable,
+            answer=f"<rejected: {reason}>", rejected=True)
+
+    @staticmethod
     def _generated_outcome(q: Question, action: Action, prompt_len: int,
                            n_out: int, hit: bool) -> ActionOutcome:
         return ActionOutcome(
@@ -126,9 +143,11 @@ class ContinuousEngineBackend(EngineBackend):
 
         ``mesh=None`` gives the single-device executor; passing a
         ``jax.sharding.Mesh`` shards the slot dimension over its data
-        axis (``ShardedExecutor``); an explicit ``executor`` overrides
-        both.  Slot caches hold the padded prompt plus the generation
-        budget (``max_prompt_len + max_new_tokens``).
+        axis and the params over its model axis when ``mp > 1``
+        (``ShardedExecutor`` — dp×mp tensor-parallel decode); an
+        explicit ``executor`` overrides both.  Slot caches hold the
+        padded prompt plus the generation budget
+        (``max_prompt_len + max_new_tokens``).
         """
         from repro.serving.continuous import ContinuousEngine
         engine = ContinuousEngine(
@@ -151,14 +170,22 @@ class ContinuousEngineBackend(EngineBackend):
                 continue
             toks, hit = self._prep(q, action)
             rid = self.engine.reserve_rid()
-            self.engine.submit(rid, toks, self.max_new_tokens)
+            # non-strict: an over-length prompt is rejected per-request
+            # (failed CompletedGeneration) instead of raising and
+            # killing the micro-batch with other slots still resident
+            self.engine.submit(rid, toks, self.max_new_tokens,
+                               strict=False)
             submitted[rid] = (i, q, action, hit, len(toks))
         if submitted:
             done = self.engine.run()
             for rid, (i, q, action, hit, plen) in submitted.items():
                 gen = done[rid]
-                outcomes[i] = self._generated_outcome(q, action, plen,
-                                                      gen.n_steps, hit)
+                if gen.failed:
+                    outcomes[i] = self._rejected_outcome(q, action,
+                                                         gen.failed)
+                else:
+                    outcomes[i] = self._generated_outcome(
+                        q, action, plen, gen.n_steps, hit)
         return outcomes
 
     def execute_batch(self, questions: Sequence[Question],

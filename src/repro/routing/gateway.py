@@ -50,6 +50,10 @@ class Request:
 @dataclass
 class GatewayStats:
     served: int = 0
+    # engine capacity rejections (ActionOutcome.rejected) — counted
+    # apart from policy refusals so a misconfigured engine doesn't
+    # masquerade as deliberate refusal behaviour
+    rejected: int = 0
     total_reward: float = 0.0
     action_counts: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
     refusal_cap_history: List[float] = field(default_factory=list)
@@ -126,6 +130,8 @@ class Gateway:
             answerable=out.answerable, latency_ms=lat_ms)
         self.budget.record(outcome)
         self.stats.served += 1
+        if getattr(out, "rejected", False):
+            self.stats.rejected += 1
         self.stats.total_reward += rew
         self.stats.action_counts[a] += 1
         if self.on_outcome is not None:
@@ -149,11 +155,13 @@ class Gateway:
             # continuous backend: the whole routed micro-batch — every
             # action bucket — feeds one shared in-flight decode stream
             acts = [int(a) for a in decision.actions]
-            t0 = time.time()
+            # perf_counter: monotonic — wall clock can step backwards
+            # under NTP adjustment and produce negative latency_ms
+            t0 = time.perf_counter()
             outs = self.backend.execute_mixed(
                 [r.question for r in batch],
                 [self.space[a] for a in acts])
-            lat_ms = (time.time() - t0) * 1e3 / max(len(batch), 1)
+            lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(batch), 1)
             for r, a, out in zip(batch, acts, outs):
                 self._account(r, a, out, lat_ms)
             return self.stats
@@ -166,10 +174,10 @@ class Gateway:
 
         for a, idxs in sorted(buckets.items()):
             action = self.space[a]
-            t0 = time.time()
+            t0 = time.perf_counter()
             outs = self.backend.execute_batch(
                 [batch[i].question for i in idxs], action)
-            lat_ms = (time.time() - t0) * 1e3 / max(len(idxs), 1)
+            lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(idxs), 1)
             for i, out in zip(idxs, outs):
                 self._account(batch[i], a, out, lat_ms)
         return self.stats

@@ -13,7 +13,8 @@ The engine is split into two layers:
   prefill / fused insert+commit / K-step decode-chunk programs and the
   once-per-lifetime slot cache.  ``SingleDeviceExecutor`` runs on the
   default device; ``ShardedExecutor`` lays the slot dimension out over
-  a ``jax.sharding.Mesh`` (slots on the data axis) so the same
+  a ``jax.sharding.Mesh`` (slots on the data axis, params
+  tensor-parallel on the model axis when ``mp>1``) so the same
   scheduler drives N devices.
 
 **Prefill/decode overlap.**  Executor calls are async dispatch; the
@@ -67,13 +68,15 @@ class CompletedGeneration:
     tokens: np.ndarray        # (n,) generated tokens, incl. EOS if emitted
     n_steps: int              # == len(tokens)
     prompt_len: int
-    finished_at: float = 0.0  # host wall clock at harvest (latency calc)
+    finished_at: float = 0.0  # host monotonic clock at harvest (latency)
+    failed: str = ""          # non-empty: rejected at submit, never admitted
 
 
 @dataclass
 class EngineStats:
     n_admitted: int = 0
     n_completed: int = 0
+    n_rejected: int = 0       # refused at submit (over-length / empty)
     n_prefills: int = 0
     n_decode_chunks: int = 0
     n_decode_steps: int = 0
@@ -151,16 +154,41 @@ class ContinuousEngine:
         return rid
 
     def submit(self, rid: int, prompt: Sequence[int],
-               max_new_tokens: int = 16) -> None:
+               max_new_tokens: int = 16, *, strict: bool = True) -> bool:
+        """Enqueue one request.  Returns True when accepted.
+
+        An over-length prompt (padded length + generation budget beyond
+        ``max_len``) or an empty prompt cannot be admitted.  With
+        ``strict=True`` (default) that raises ``ValueError``; with
+        ``strict=False`` the request is rejected PER-REQUEST instead:
+        it completes immediately as a failed :class:`CompletedGeneration`
+        (``failed`` holds the reason) returned by the next ``run()``,
+        and the rest of the stream — other requests' resident slots
+        included — keeps serving.  The serving Gateway uses the
+        non-strict path so one long prompt in a routed batch can't kill
+        the whole micro-batch mid-flight.
+        """
+        reason = ""
+        plen = len(prompt)
         if not prompt:
-            raise ValueError("empty prompt")
-        max_new = min(max_new_tokens, self.max_new_cap)
-        plen = self._padded_len(len(prompt))
-        if plen + max_new > self.max_len:
-            raise ValueError(
-                f"prompt len {plen} + max_new {max_new} exceeds "
-                f"max_len {self.max_len}")
+            reason = "empty prompt"
+        else:
+            max_new = min(max_new_tokens, self.max_new_cap)
+            plen = self._padded_len(len(prompt))
+            if plen + max_new > self.max_len:
+                reason = (f"prompt len {plen} + max_new {max_new} exceeds "
+                          f"max_len {self.max_len}")
+        if reason:
+            if strict:
+                raise ValueError(reason)
+            self.stats.n_rejected += 1
+            self._results[rid] = CompletedGeneration(
+                rid=rid, tokens=np.zeros(0, np.int32), n_steps=0,
+                prompt_len=plen, finished_at=time.perf_counter(),
+                failed=reason)
+            return False
         self._queue.append(SlotRequest(rid, list(prompt), max_new))
+        return True
 
     def _padded_len(self, n: int) -> int:
         m = self.prefill_pad_multiple
@@ -232,7 +260,7 @@ class ContinuousEngine:
             return
         # fetch the output buffer only when something actually finished
         out = self.executor.fetch_outputs()
-        now = time.time()
+        now = time.perf_counter()
         for slot in done_slots:
             n = int(self._gen[slot])
             self._results[self._rid[slot]] = CompletedGeneration(

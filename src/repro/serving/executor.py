@@ -9,14 +9,23 @@ behind the :class:`DeviceExecutor` protocol implemented here:
   cache + prefill scratch allocated once, jitted prefill / fused
   insert+state-commit / K-step decode chunk, donated buffers.
 * :class:`ShardedExecutor` — the same jitted programs laid out over a
-  ``jax.sharding.Mesh`` with the SLOT dimension partitioned on the data
-  axis(es).  The KV cache, slot control arrays, and output buffer are
-  all ``NamedSharding``-placed and the jits carry matching
+  ``dp×mp`` ``jax.sharding.Mesh``.  The SLOT dimension partitions on
+  the data axis(es): KV cache, slot control arrays, and output buffer
+  are all ``NamedSharding``-placed and the jits carry matching
   ``out_shardings``, so each device owns ``num_slots / dp`` slot rows
   end-to-end — decode never moves a slot row across devices.  Params
-  and the prefill scratch are replicated: prefill is a small batched
-  program, and replicating it keeps the insert scatter local (every
-  device has the source rows and writes only its own slots).
+  place via :func:`repro.sharding.shardings_for_schema` over the model
+  schema's logical axes (``fsdp=False`` — inference wants weights
+  resident, not ZeRO-gathered), so on an ``mp>1`` mesh attention heads
+  / FFN / vocab dims shard over the ``model`` axis and every jitted
+  program runs tensor-parallel; KV-cache ``kv_heads`` dims ride the
+  same axis, keeping each model shard's cache writes local.  The
+  prefill scratch shards its rows over ``data`` when ``prefill_batch``
+  divides the data-axis size (large admission groups no longer
+  replicate prefill work; the insert scatter all-gathers the few
+  scratch rows), and falls back to replicated rows otherwise.  On a
+  ``mp=1`` mesh every param spec degenerates to replicated — the
+  original slot-data-parallel layout.
 
 Both executors dispatch asynchronously (JAX async dispatch): ``admit``
 and ``decode_chunk`` return as soon as the work is enqueued, and the
@@ -50,7 +59,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data.tokenizer import EOS, PAD
-from repro.sharding import batch_axes, mesh_axis_sizes, specs_for_schema
+from repro.sharding import (batch_axes, input_sharding, mesh_axis_sizes,
+                            shardings_for_schema)
 
 
 class SingleDeviceExecutor:
@@ -100,6 +110,12 @@ class SingleDeviceExecutor:
                                donate_argnums=(1, 2, 3, 4, 6))
 
     def _host_to_device(self, x: np.ndarray):
+        return jnp.asarray(x)
+
+    def _tokens_to_device(self, x: np.ndarray):
+        """Upload one admission group's padded token rows (PB, plen).
+        Split from `_host_to_device` so the sharded executor can lay
+        the rows out like the prefill scratch."""
         return jnp.asarray(x)
 
     # -- jitted bodies --------------------------------------------------
@@ -174,7 +190,7 @@ class SingleDeviceExecutor:
         decode chunk already in flight; the insert/commit is serialized
         behind that chunk by its data dependency on the slot cache."""
         firsts, self._pcache = self._prefill(
-            self.params, self._pcache, self._host_to_device(tokens))
+            self.params, self._pcache, self._tokens_to_device(tokens))
         (self._cache, self._dtok, self._dactive, self._dgen, self._dlimit,
          self._dout) = self._commit(
             self._cache, self._pcache, self._dtok, self._dactive,
@@ -199,19 +215,30 @@ class SingleDeviceExecutor:
 
 
 class ShardedExecutor(SingleDeviceExecutor):
-    """Slot-dimension data-parallel executor over a device mesh.
+    """dp×mp mesh executor: slots on ``data``, params on ``model``.
 
     The slot cache schema tags the slot dimension as the ``batch``
-    logical axis, so :func:`repro.sharding.specs_for_schema` resolves
-    every cache leaf to a slot-on-``data`` PartitionSpec; the control
-    arrays and output buffer get the matching ``P("data")`` /
+    logical axis, so :func:`repro.sharding.shardings_for_schema`
+    resolves every cache leaf to a slot-on-``data`` placement (and, on
+    an ``mp>1`` mesh, its ``kv_heads`` dim to the ``model`` axis); the
+    control arrays and output buffer get the matching ``P("data")`` /
     ``P("data", None)`` layouts.  ``num_slots`` must divide the data
     axis size so every device owns the same number of slot rows.
 
+    Params resolve through the same schema machinery (``fsdp=False``):
+    attention heads, FFN, and vocab dims partition over the ``model``
+    axis, so the prefill / insert+commit / decode-chunk programs run
+    tensor-parallel under GSPMD — the fix for ``mp>1`` serve meshes
+    silently replicating the full model per device.  The prefill
+    scratch shards its rows over ``data`` when ``prefill_batch``
+    divides the data-axis size, so batched prefill work partitions
+    instead of replicating; the insert scatter all-gathers the scratch
+    rows (each device writes only its own slots).
+
     Greedy decode is row-independent, so a 1-device mesh is
-    token-identical to :class:`SingleDeviceExecutor`; an N-device mesh
-    is token-identical by construction (verified by the forced-8-device
-    parity test).
+    token-identical to :class:`SingleDeviceExecutor`; dp-only and
+    dp×mp meshes are token-identical by construction (verified by the
+    forced-8-device ``dp=8`` and ``dp=4,mp=2`` parity tests).
     """
 
     def __init__(self, model, params, *, mesh: Mesh, **kw):
@@ -226,22 +253,27 @@ class ShardedExecutor(SingleDeviceExecutor):
                 f"num_slots={self.num_slots} must be divisible by the "
                 f"mesh data-axis size {dp} to shard the slot dimension")
         self._rep = NamedSharding(self.mesh, P())
-        rep_tree = lambda tree: jax.tree_util.tree_map(
-            lambda _: self._rep, tree)
-        # params + prefill scratch replicated; slot-dim tensors sharded
-        self._param_sh = rep_tree(self.params)
-        self._pcache_sh = rep_tree(self._pcache)
-        cache_schema = self.model.cache_schema(self.num_slots, self.max_len)
-        self._cache_sh = jax.tree_util.tree_map(
-            lambda spec: NamedSharding(self.mesh, spec),
-            specs_for_schema(cache_schema, self.mesh),
-            is_leaf=lambda x: isinstance(x, P))
+        # params: model-axis tensor parallel from the schema's logical
+        # axes; slot cache + prefill scratch: batch dims on data,
+        # kv-head dims on model (cache leaves carry "batch", so the
+        # FSDP pass never touches them)
+        self._param_sh = shardings_for_schema(self.model.schema, self.mesh,
+                                              fsdp=False)
+        self._cache_sh = shardings_for_schema(
+            self.model.cache_schema(self.num_slots, self.max_len), self.mesh)
+        self._pcache_sh = shardings_for_schema(
+            self.model.cache_schema(self.prefill_batch, self.max_len),
+            self.mesh)
         # one tuple entry: the slot dim shards over ALL batch axes
         # (("pod","data") on multi-pod meshes — P("pod","data") would
         # wrongly assign them to two dims of a 1-D array)
         self._slot_sh = NamedSharding(self.mesh, P(batch_axes(self.mesh)))
         self._out_sh = NamedSharding(self.mesh,
                                      P(batch_axes(self.mesh), None))
+        # admitted token rows + the prefill's first-token output ride
+        # the scratch's row layout (replicated when PB doesn't divide)
+        self._row2_sh = input_sharding(self.mesh, self.prefill_batch, 2)
+        self._row1_sh = input_sharding(self.mesh, self.prefill_batch, 1)
         self.params = jax.device_put(self.params, self._param_sh)
         self._cache = jax.device_put(self._cache, self._cache_sh)
         self._pcache = jax.device_put(self._pcache, self._pcache_sh)
@@ -255,7 +287,7 @@ class ShardedExecutor(SingleDeviceExecutor):
         s = self._slot_sh
         self._prefill = jax.jit(
             self._prefill_fn, donate_argnums=(1,),
-            out_shardings=(self._rep, self._pcache_sh))
+            out_shardings=(self._row1_sh, self._pcache_sh))
         self._commit = jax.jit(
             self._commit_fn, donate_argnums=(0, 2, 3, 4, 5, 6),
             out_shardings=(self._cache_sh, s, s, s, s, self._out_sh))
@@ -264,5 +296,8 @@ class ShardedExecutor(SingleDeviceExecutor):
             out_shardings=(self._cache_sh, s, s, s, self._out_sh))
 
     def _host_to_device(self, x: np.ndarray):
-        # small host inputs (tokens, slot ids, limits) ride in replicated
+        # small host control inputs (slot ids, limits) ride replicated
         return jax.device_put(x, self._rep)
+
+    def _tokens_to_device(self, x: np.ndarray):
+        return jax.device_put(x, self._row2_sh)

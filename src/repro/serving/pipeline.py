@@ -31,6 +31,11 @@ class ActionOutcome:
     hit: bool                 # gold answer string in retrieved set
     answerable: bool
     answer: str
+    # engine capacity rejection (e.g. over-length prompt), not a policy
+    # refusal — refused is still True so reward/error-budget accounting
+    # treats the unserved request as an SLO violation, but downstream
+    # consumers can tell the two apart (Gateway counts them separately)
+    rejected: bool = False
 
     def to_row(self) -> dict:
         return asdict(self)

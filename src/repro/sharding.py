@@ -110,13 +110,19 @@ def resolve_spec(ps: ParamSpec, mesh: Mesh, *, fsdp: bool = True,
     return P(*entries)
 
 
+def leaf_name(path) -> str:
+    """'blocks/p0/attn/wq'-style name for a tree_map_with_path key path
+    (shared by spec resolution, the fallback audit, and tests)."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
 def specs_for_schema(schema, mesh: Mesh, *, fsdp: bool = True,
                      ep: bool = False):
     """PartitionSpec tree matching a ParamSpec tree."""
     def f(path, ps):
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
-        return resolve_spec(ps, mesh, fsdp=fsdp, ep=ep, log_name=name)
+        return resolve_spec(ps, mesh, fsdp=fsdp, ep=ep,
+                            log_name=leaf_name(path))
 
     return jax.tree_util.tree_map_with_path(
         f, schema, is_leaf=lambda x: isinstance(x, ParamSpec))
@@ -127,6 +133,33 @@ def shardings_for_schema(schema, mesh: Mesh, **kw):
         lambda spec: NamedSharding(mesh, spec),
         specs_for_schema(schema, mesh, **kw),
         is_leaf=lambda x: isinstance(x, P))
+
+
+def model_axis_fallbacks(schema, mesh: Mesh, *, fsdp: bool = False):
+    """Audit the ``model``-axis coverage of a schema on a mesh.
+
+    Returns ``(sharded, fallbacks)``: names of leaves that carry a
+    MODEL_PRIORITY logical axis and resolve WITH / WITHOUT a ``model``
+    entry on this mesh.  A non-empty ``fallbacks`` list on an ``mp>1``
+    serve mesh means those tensors silently replicate over the model
+    axis (the divisibility fallback) — surfaced by the serving-mesh
+    validation and asserted empty in the dp×mp executor tests.
+    """
+    sharded: List[str] = []
+    fallbacks: List[str] = []
+
+    def f(path, ps):
+        if not any(a in MODEL_PRIORITY for a in ps.axes):
+            return ps
+        name = leaf_name(path)
+        spec = resolve_spec(ps, mesh, fsdp=fsdp, log_name=name)
+        hit = any(e == "model" for e in spec)
+        (sharded if hit else fallbacks).append(name)
+        return ps
+
+    jax.tree_util.tree_map_with_path(
+        f, schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sharded, fallbacks
 
 
 def input_sharding(mesh: Mesh, batch: int, rank: int) -> NamedSharding:

@@ -98,6 +98,34 @@ def test_submit_rejects_overflow(qwen):
         ce.submit(1, [], max_new_tokens=2)
 
 
+def test_overlength_rejected_per_request_keeps_stream_alive(qwen):
+    """Regression: one over-length prompt in a mixed stream must not
+    kill the run — with strict=False it surfaces as a failed
+    CompletedGeneration while every other request's output is
+    token-identical to an all-valid stream."""
+    cfg, model, params = qwen
+    good = _prompts(cfg, 3, 8)
+    ref = ContinuousEngine(model, params, num_slots=2, max_len=32,
+                           max_new_cap=8)
+    want = [list(o.tokens) for o in ref.generate_many(good,
+                                                      max_new_tokens=6)]
+
+    ce = ContinuousEngine(model, params, num_slots=2, max_len=32,
+                          max_new_cap=8)
+    long_prompt = _prompts(cfg, 1, 30, seed=9)[0]   # 30 + 6 > 32
+    rids = [ce.reserve_rid() for _ in range(4)]
+    ce.submit(rids[0], good[0], 6)
+    assert ce.submit(rids[1], long_prompt, 6, strict=False) is False
+    ce.submit(rids[2], good[1], 6)
+    ce.submit(rids[3], good[2], 6)
+    done = ce.run()
+    assert done[rids[1]].failed and "max_len" in done[rids[1]].failed
+    assert done[rids[1]].n_steps == 0
+    got = [list(done[r].tokens) for r in (rids[0], rids[2], rids[3])]
+    assert got == want
+    assert ce.stats.n_rejected == 1 and ce.stats.n_completed == 3
+
+
 def test_interleaved_waves_keep_results_separate(qwen):
     """run() returns only the requests completed since the last call."""
     cfg, model, params = qwen
@@ -161,6 +189,38 @@ def test_gateway_mixed_stream_shares_inflight_batch(qwen, small_testbed):
     assert engine.stats.cache_allocations == 2
     # refusals never reached the engine
     assert stats.action_counts[4] == 2 and engine.stats.n_completed == 8
+
+
+def test_gateway_survives_overlength_requests(qwen, small_testbed):
+    """Regression for the Gateway-killing failure: a backend whose
+    prompts can't fit the engine's max_len serves the whole batch as
+    per-request rejected (refused) outcomes — the stream stays alive,
+    every request is accounted, nothing raises."""
+    from repro.data.tokenizer import HashTokenizer
+    from repro.routing import ContinuousEngineBackend, Gateway, Request
+
+    mcfg, model, params = qwen
+    tcfg, (data, index, *_rest) = small_testbed
+    # max_len 100 < max_prompt_len 128 + max_new 4: every generating
+    # request overflows; refusal-routed ones never reach the engine
+    engine = ContinuousEngine(model, params, num_slots=4, max_len=100,
+                              max_new_cap=4)
+    backend = ContinuousEngineBackend(
+        engine, HashTokenizer(mcfg.vocab_size), index,
+        max_prompt_len=128, max_new_tokens=4)
+    gw = Gateway(_RoundRobinPolicy(), backend, router_cfg=tcfg.router,
+                 index=index, max_batch=10, adaptive_refusal=False)
+    reqs = [Request(qid=q.qid, question=q, slo="quality_first")
+            for q in data.questions[:10]]
+    stats = gw.serve(reqs)
+    assert stats.served == 10                 # nothing killed the batch
+    assert engine.stats.n_rejected == 8       # all generating requests
+    assert engine.stats.n_admitted == 0
+    # capacity rejections counted apart from the 2 policy refusals
+    assert stats.rejected == 8
+    outcomes_refused = stats.action_counts    # all 5 actions accounted
+    assert sum(outcomes_refused.values()) == 10
+    assert all(np.isfinite(v) for v in (stats.avg_reward,))
 
 
 def test_continuous_backend_outcomes_match_bucketed_accounting(qwen,

@@ -202,3 +202,65 @@ def test_interleaved_runs_keep_results_separate():
     a = eng.generate_many(_prompts([3, 4], seed=1), max_new_tokens=4)
     b = eng.generate_many(_prompts([5, 6], seed=2), max_new_tokens=4)
     assert {o.rid for o in a}.isdisjoint({o.rid for o in b})
+
+
+# --- per-request reject path -------------------------------------------------
+
+
+def test_strict_submit_still_raises_on_overflow():
+    eng, fake = make_engine(num_slots=2, max_len=16, max_new_cap=8)
+    with pytest.raises(ValueError):
+        eng.submit(0, list(range(4, 18)), max_new_tokens=8)
+    with pytest.raises(ValueError):
+        eng.submit(1, [], max_new_tokens=2)
+
+
+def test_nonstrict_overlength_rejected_per_request_stream_alive():
+    """One over-length prompt in a mixed stream is rejected as a failed
+    CompletedGeneration; every other request still completes with its
+    exact scripted tokens and the rejected one is never admitted."""
+    eng, fake = make_engine(num_slots=2, max_len=16, max_new_cap=8)
+    good = _prompts([4, 5, 6])
+    long_prompt = list(range(4, 4 + 14))        # 14 + 8 > max_len 16
+    rids = [eng.reserve_rid() for _ in range(4)]
+    assert eng.submit(rids[0], good[0], 6) is True
+    assert eng.submit(rids[1], long_prompt, 6, strict=False) is False
+    assert eng.submit(rids[2], good[1], 6) is True
+    assert eng.submit(rids[3], good[2], 6) is True
+    done = eng.run()
+    assert set(done) == set(rids)
+    rej = done[rids[1]]
+    assert rej.failed and "max_len" in rej.failed
+    assert rej.n_steps == 0 and len(rej.tokens) == 0
+    for rid, p in zip((rids[0], rids[2], rids[3]), good):
+        assert list(done[rid].tokens) == expected(arith_gen(p), 6)
+    # the rejected prompt never reached the executor
+    admitted = [p for _, g in fake.admit_log for p in g]
+    assert long_prompt not in admitted
+    assert eng.stats.n_rejected == 1
+    assert eng.stats.n_admitted == 3 and eng.stats.n_completed == 3
+
+
+def test_nonstrict_empty_prompt_rejected():
+    eng, fake = make_engine(num_slots=2)
+    rid = eng.reserve_rid()
+    assert eng.submit(rid, [], 4, strict=False) is False
+    done = eng.run()
+    assert done[rid].failed == "empty prompt"
+    assert eng.stats.n_rejected == 1 and not fake.admit_log
+
+
+def test_nonstrict_reject_with_slots_resident_mid_flight():
+    """The Gateway failure mode: requests already resident in slots
+    must survive a mid-flight rejection (submit while a wave is being
+    drained) — scripted via two submit waves into one run()."""
+    eng, fake = make_engine(num_slots=1, max_len=16, max_new_cap=8)
+    p0, p1 = _prompts([4, 5])
+    r0, r1, r2 = (eng.reserve_rid() for _ in range(3))
+    eng.submit(r0, p0, 6)
+    eng.submit(r1, list(range(4, 4 + 15)), 6, strict=False)  # rejected
+    eng.submit(r2, p1, 6)
+    done = eng.run()
+    assert done[r1].failed
+    assert list(done[r0].tokens) == expected(arith_gen(p0), 6)
+    assert list(done[r2].tokens) == expected(arith_gen(p1), 6)
