@@ -1,6 +1,7 @@
 """Shared testbed/policy cache so each table reuses one sweep."""
 from __future__ import annotations
 
+import dataclasses
 import functools
 import json
 import time
@@ -19,6 +20,22 @@ def canonical_results():
     res, extras, logs = run_experiment(
         cfg, include_mitigation=True, refusal_cap=0.45, verbose=False)
     return cfg, res, extras, logs
+
+
+@functools.lru_cache(maxsize=1)
+def canonical_hybrid9_logs():
+    """hybrid9 offline logs (9-action full sweep with the dense/hybrid
+    retrievers) on the canonical testbed sizes — the retriever-choice
+    counterpart of :func:`canonical_results`."""
+    from repro.core.offline_log import build_testbed
+    from repro.routing import get_action_space
+
+    space = get_action_space("hybrid9")
+    cfg = TestbedConfig()
+    cfg = dataclasses.replace(cfg, router=dataclasses.replace(
+        cfg.router, n_actions=space.n_actions))
+    data, index, pipe, train_log, eval_log = build_testbed(cfg, space)
+    return cfg, space, (train_log, eval_log)
 
 
 def save_artifact(name: str, obj) -> Path:

@@ -15,8 +15,8 @@ import time
 from benchmarks import (conditioned_policy, fig1_action_dist,
                         fig2_cost_quality, fig3_reward, kernels_bench,
                         mitigation, objectives_ablation, ope, pareto_sweep,
-                        perf_variants, roofline, seeds_ablation,
-                        serving_bench, table1_slo_grid)
+                        perf_variants, retrieval_bench, roofline,
+                        seeds_ablation, serving_bench, table1_slo_grid)
 
 BENCHMARKS = {
     "table1": table1_slo_grid.main,     # paper Table 1
@@ -33,6 +33,9 @@ BENCHMARKS = {
     "serving": serving_bench.main,      # padded vs continuous vs sharded
                                         # engines (writes BENCH_serving.json
                                         # at repo root + artifacts/)
+    "retrieval": retrieval_bench.main,  # bm25 vs dense vs hybrid vs sharded
+                                        # + hit@k + hybrid9 collapse check
+                                        # (writes BENCH_retrieval.json)
     "roofline": roofline.main,          # §Roofline table
     "perf": perf_variants.main,         # §Perf before/after from records
 }

@@ -69,7 +69,8 @@ def _concat_logs(log: OfflineLog, k: int, states: np.ndarray) -> OfflineLog:
     rep = lambda x: np.concatenate([x] * k, axis=0)
     return OfflineLog(states, rep(log.correct), rep(log.refused),
                       rep(log.hallucinated), rep(log.cost), rep(log.hit),
-                      rep(log.answerable), rep(log.qids))
+                      rep(log.answerable), rep(log.qids),
+                      refuse_action=log.refuse_action)
 
 
 def conditioned_actions(result: TrainResult, ccfg: RouterConfig,

@@ -268,6 +268,13 @@ class RetrievalConfig:
     k1: float = 1.2                 # BM25 params [Robertson & Zaragoza 2009]
     b: float = 0.75
     max_k: int = 10
+    # dense retriever: hashed signed n-gram embedding dim (128-aligned
+    # so the (D, E) doc matrix feeds the Pallas dense_topk kernel)
+    dense_embed_dim: int = 256
+    # hybrid fusion: "rrf" (reciprocal rank) | "weighted" (normalized
+    # score mix); bm25 weight for "weighted" (dense gets 1 - alpha)
+    hybrid_method: str = "rrf"
+    hybrid_alpha: float = 0.5
 
 
 @dataclass(frozen=True)

@@ -14,7 +14,6 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.actions import N_ACTIONS
 from repro.core.config import SLOProfile
 from repro.core.offline_log import OfflineLog
 
@@ -52,7 +51,8 @@ def evaluate_actions(log: OfflineLog, actions: np.ndarray,
     unans = ~ans
     hall_rate = float(hall[unans].mean()) if unans.any() else 0.0
     hit = log.hit[idx, actions]
-    dist = np.bincount(actions, minlength=N_ACTIONS) / n
+    # sized to the LOGGED action space (paper5's 5, hybrid9's 9, ...)
+    dist = np.bincount(actions, minlength=log.n_actions) / n
     return PolicyReport(
         name=name,
         acc=float(log.correct[idx, actions].mean()),

@@ -4,24 +4,33 @@ For every question we execute ALL actions ("full action sweep") and
 store per-action metrics; rewards are recomputed per SLO profile from
 the stored indicators, exactly as the paper regenerates rewards without
 re-calling the generator.
+
+Logs are action-space generic: the sweep runs over any registered
+:class:`~repro.routing.registry.ActionSpace` (the paper's ``paper5`` is
+the default and reproduces bit-for-bit), and the log remembers which
+action index is the pre-retrieval refusal so eq. (1)'s refusal-credit
+scaling survives spaces where refuse is not action 4 (e.g. ``hybrid9``).
 """
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass
 from pathlib import Path
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.actions import ACTIONS, N_ACTIONS, reward
+from repro.core.actions import reward
 from repro.core.config import RouterConfig, SLOProfile, TestbedConfig
 from repro.core.features import state_vector
 from repro.data.synthetic_squad import Question, SyntheticSquad
 from repro.data.tokenizer import HashTokenizer
 from repro.generation.simulator import SimulatedGenerator
 from repro.retrieval.bm25 import BM25Index
+from repro.routing.registry import ActionSpace, get_action_space
 from repro.serving.pipeline import RAGPipeline
+
+_SAVE_KEYS = ("states", "correct", "refused", "hallucinated", "cost",
+              "hit", "answerable", "qids")
 
 
 @dataclass
@@ -34,16 +43,24 @@ class OfflineLog:
     hit: np.ndarray           # (N, A) bool
     answerable: np.ndarray    # (N,) bool
     qids: np.ndarray          # (N,)
+    # which action is the pre-retrieval refusal (paper5's action 4);
+    # None = no refuse action in the logged space
+    refuse_action: Optional[int] = 4
 
     @property
     def n(self) -> int:
         return len(self.qids)
 
+    @property
+    def n_actions(self) -> int:
+        return self.correct.shape[1]
+
     def rewards(self, profile: SLOProfile) -> np.ndarray:
         """(N, A) reward matrix under an SLO profile (eq. 1)."""
-        r = np.zeros((self.n, N_ACTIONS), np.float32)
+        A = self.n_actions
+        r = np.zeros((self.n, A), np.float32)
         for i in range(self.n):
-            for a in range(N_ACTIONS):
+            for a in range(A):
                 r[i, a] = reward(
                     profile,
                     correct=bool(self.correct[i, a]),
@@ -51,35 +68,43 @@ class OfflineLog:
                     hallucinated=bool(self.hallucinated[i, a]),
                     refused=bool(self.refused[i, a]),
                     answerable=bool(self.answerable[i]),
-                    pre_retrieval=(a == 4))
+                    pre_retrieval=(a == self.refuse_action))
         return r
 
     def subset(self, idx: np.ndarray) -> "OfflineLog":
         return OfflineLog(self.states[idx], self.correct[idx],
                           self.refused[idx], self.hallucinated[idx],
                           self.cost[idx], self.hit[idx],
-                          self.answerable[idx], self.qids[idx])
+                          self.answerable[idx], self.qids[idx],
+                          refuse_action=self.refuse_action)
 
     def save(self, path: str | Path):
-        np.savez_compressed(path, **{k: getattr(self, k) for k in (
-            "states", "correct", "refused", "hallucinated", "cost", "hit",
-            "answerable", "qids")})
+        arrays = {k: getattr(self, k) for k in _SAVE_KEYS}
+        # -1 encodes "no refuse action in this space" so None round-trips
+        # (a missing key means a pre-PR-5 paper5 log: refuse at 4)
+        arrays["refuse_action"] = np.int64(
+            -1 if self.refuse_action is None else self.refuse_action)
+        np.savez_compressed(path, **arrays)
 
     @classmethod
     def load(cls, path: str | Path) -> "OfflineLog":
         z = np.load(path)
-        return cls(**{k: z[k] for k in z.files})
+        ra = int(z["refuse_action"]) if "refuse_action" in z.files else 4
+        return cls(**{k: z[k] for k in _SAVE_KEYS},
+                   refuse_action=None if ra < 0 else ra)
 
 
 def generate_log(questions: Sequence[Question], pipeline: RAGPipeline,
-                 index: BM25Index, router_cfg: RouterConfig) -> OfflineLog:
-    n = len(questions)
+                 index: BM25Index, router_cfg: RouterConfig,
+                 space: Optional[ActionSpace] = None) -> OfflineLog:
+    space = space if space is not None else get_action_space()
+    n, A = len(questions), len(space)
     states = np.zeros((n, router_cfg.state_dim), np.float32)
-    correct = np.zeros((n, N_ACTIONS), bool)
-    refused = np.zeros((n, N_ACTIONS), bool)
-    hall = np.zeros((n, N_ACTIONS), bool)
-    cost = np.zeros((n, N_ACTIONS), np.float32)
-    hit = np.zeros((n, N_ACTIONS), bool)
+    correct = np.zeros((n, A), bool)
+    refused = np.zeros((n, A), bool)
+    hall = np.zeros((n, A), bool)
+    cost = np.zeros((n, A), np.float32)
+    hit = np.zeros((n, A), bool)
     answerable = np.zeros(n, bool)
     qids = np.zeros(n, np.int64)
 
@@ -87,7 +112,7 @@ def generate_log(questions: Sequence[Question], pipeline: RAGPipeline,
         states[i] = state_vector(q.text, index, router_cfg)
         answerable[i] = q.answerable
         qids[i] = q.qid
-        for out in pipeline.sweep(q):
+        for out in pipeline.sweep(q, space):
             a = out.action
             correct[i, a] = out.correct
             refused[i, a] = out.refused
@@ -95,21 +120,34 @@ def generate_log(questions: Sequence[Question], pipeline: RAGPipeline,
             cost[i, a] = out.cost_tokens
             hit[i, a] = out.hit
     return OfflineLog(states, correct, refused, hall, cost, hit,
-                      answerable, qids)
+                      answerable, qids, refuse_action=space.refuse_action)
 
 
-def build_testbed(cfg: TestbedConfig):
-    """Corpus + index + pipeline + (train_log, eval_log)."""
+def build_testbed(cfg: TestbedConfig, space: Optional[ActionSpace] = None):
+    """Corpus + index + pipeline + (train_log, eval_log).
+
+    ``space=None`` is the paper's registered default (bit-for-bit).  A
+    space whose actions reference the ``dense``/``hybrid`` retrievers
+    (e.g. ``hybrid9``) additionally builds the dense index and wires
+    the full retriever suite into the pipeline.
+    """
     data = SyntheticSquad(
         n_paragraphs=cfg.n_paragraphs,
         n_questions=cfg.n_train + cfg.n_eval,
         answerable_frac=cfg.answerable_frac,
         seed=cfg.seed)
-    index = BM25Index.build([p.text for p in data.paragraphs], cfg.retrieval)
+    texts = [p.text for p in data.paragraphs]
+    index = BM25Index.build(texts, cfg.retrieval)
+    retrievers = None
+    if space is not None and set(space.retriever_names) - {"bm25"}:
+        from repro.retrieval.dense import DenseIndex
+        from repro.retrieval.hybrid import build_retriever_suite
+        retrievers = build_retriever_suite(
+            index, DenseIndex.build(texts, cfg.retrieval))
     tok = HashTokenizer(32768)
     gen = SimulatedGenerator(tok, seed=cfg.seed)
-    pipe = RAGPipeline(index, gen)
+    pipe = RAGPipeline(index, gen, retrievers)
     train_q, eval_q = data.split(cfg.n_eval)
-    train_log = generate_log(train_q, pipe, index, cfg.router)
-    eval_log = generate_log(eval_q, pipe, index, cfg.router)
+    train_log = generate_log(train_q, pipe, index, cfg.router, space)
+    eval_log = generate_log(eval_q, pipe, index, cfg.router, space)
     return data, index, pipe, train_log, eval_log

@@ -97,11 +97,25 @@ class TrainResult:
 
 def train_policy(log: OfflineLog, rewards: np.ndarray, cfg: RouterConfig,
                  *, objective: Optional[str] = None,
-                 refusal_cap: float = 1.0,
-                 dual_lr: float = 8.0, seed: Optional[int] = None) -> TrainResult:
-    """Minibatch Adam training of the routing MLP on the offline log."""
+                 refusal_cap: float = 1.0, dual_lr: float = 8.0,
+                 seed: Optional[int] = None,
+                 refuse_action: Optional[int] = None) -> TrainResult:
+    """Minibatch Adam training of the routing MLP on the offline log.
+
+    ``refuse_action`` is the action index the Lagrangian refusal terms
+    watch; the default resolves to the logged space's refuse action
+    (falling back to the paper's action 4 for legacy logs without the
+    field), so non-paper5 spaces — where refuse is not index 4 —
+    constrain the right logit.  A log whose space has NO refuse action
+    (``log.refuse_action is None``) disables the refusal term entirely
+    instead of penalizing whatever action sits at index 4.
+    """
     objective = objective or cfg.objective
     seed = cfg.seed if seed is None else seed
+    if refuse_action is None:
+        refuse_action = getattr(log, "refuse_action", REFUSE_ACTION)
+    ra = None if refuse_action is None else int(refuse_action)
+    assert ra is None or ra < cfg.n_actions, (ra, cfg.n_actions)
     best, w, soft = make_targets(rewards, objective, cfg.margin_temp)
 
     states = jnp.asarray(log.states)
@@ -125,7 +139,10 @@ def train_policy(log: OfflineLog, rewards: np.ndarray, cfg: RouterConfig,
         # weight decay
         l2 = sum(jnp.sum(p ** 2) for k, p in params.items() if k.startswith("w"))
         loss = loss + cfg.weight_decay * l2
-        p_refuse = jnp.mean(jnp.exp(logp[:, REFUSE_ACTION]))
+        if ra is None:      # refuse-free space: no refusal term at all
+            p_refuse = jnp.zeros(())
+        else:
+            p_refuse = jnp.mean(jnp.exp(logp[:, ra]))
         loss = loss + lam * p_refuse
         return loss, p_refuse
 

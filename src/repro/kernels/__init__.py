@@ -1,14 +1,15 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
 * ``bm25.py``            — blocked BM25 retrieval scoring;
+* ``dense_topk.py``      — fused dense similarity + online partial top-k;
 * ``flash_attention.py`` — online-softmax blocked attention (prefill);
 * ``flash_decode.py``    — split-KV single-query attention (decode);
 * ``ssd_scan.py``        — Mamba2 SSD chunk scan;
 * ``ops.py``             — jit'd public wrappers (interpret=True on CPU);
 * ``ref.py``             — pure-jnp oracles for the allclose sweeps.
 """
-from repro.kernels.ops import (bm25_scores, flash_attention, flash_decode,
-                               ssd_chunk_scan)
+from repro.kernels.ops import (bm25_scores, dense_topk, flash_attention,
+                               flash_decode, ssd_chunk_scan)
 
-__all__ = ["bm25_scores", "flash_attention", "flash_decode",
+__all__ = ["bm25_scores", "dense_topk", "flash_attention", "flash_decode",
            "ssd_chunk_scan"]

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bm25 import bm25_pallas
+from repro.kernels.dense_topk import _dense_topk_padded
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -39,6 +40,40 @@ def bm25_scores(query_tf, tf, doc_len, idf, *, k1: float = 1.2,
     return bm25_pallas(wq, tf.astype(jnp.float32), norm, k1=k1,
                        block_q=bq, block_d=bd, block_v=bv,
                        interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "block_q", "block_d"))
+def dense_topk(q, docs, *, k: int = 10, block_q: int = 8,
+               block_d: int = 128):
+    """Fused dense retrieval: (Q, E) queries × (D, E) docs -> top-k.
+
+    Returns (scores (Q, k) float32 descending, doc ids (Q, k) int32).
+    Both axes pad to block multiples — zero query rows just produce
+    discarded output rows, and the kernel masks the padded doc tail to
+    -inf — so any (Q, D) tiles with full-width blocks; the full (Q, D)
+    score matrix is never materialized.
+    """
+    Q, E = q.shape
+    D = docs.shape[0]
+    # align edge cases with the numpy oracle (DenseIndex.topk): empty
+    # corpus / non-positive k return empty candidate rows, and k clamps
+    # to the corpus size, instead of tripping kernel asserts
+    if k <= 0 or D == 0:
+        return (jnp.zeros((Q, 0), jnp.float32),
+                jnp.zeros((Q, 0), jnp.int32))
+    k = min(k, D)
+    bd = min(block_d, D)
+    pad_d = -D % bd
+    if pad_d:
+        docs = jnp.pad(docs, ((0, pad_d), (0, 0)))
+    pad_q = -Q % block_q
+    if pad_q:
+        q = jnp.pad(q, ((0, pad_q), (0, 0)))
+    s, i = _dense_topk_padded(q.astype(jnp.float32),
+                              docs.astype(jnp.float32), k=k, n_docs=D,
+                              block_q=block_q, block_d=bd,
+                              interpret=_interpret())
+    return (s[:Q], i[:Q]) if pad_q else (s, i)
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))

@@ -13,6 +13,19 @@ def bm25_ref(wq, tf, norm, k1: float = 1.2):
     return (wq.astype(jnp.float32) @ sat.astype(jnp.float32).T)
 
 
+def dense_topk_ref(q, docs, k: int):
+    """Dense retrieval oracle: full (Q, D) similarity + top-k.
+
+    q: (Q, E); docs: (D, E) -> (scores (Q, k) float32, ids (Q, k)
+    int32), scores descending, ties broken toward the lower doc id
+    (``lax.top_k`` semantics — the kernel's merge preserves them).
+    Materializes the full score matrix; the kernel must not.
+    """
+    s = q.astype(jnp.float32) @ docs.astype(jnp.float32).T
+    top_s, top_i = jax.lax.top_k(s, k)
+    return top_s, top_i.astype(jnp.int32)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """q: (BH, Sq, D); k/v: (BH, Skv, D[v])."""
     scale = 1.0 / (q.shape[-1] ** 0.5)

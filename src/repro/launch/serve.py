@@ -28,15 +28,20 @@ import json
 
 import numpy as np
 
+import dataclasses
+
 from repro.core.config import TestbedConfig
 from repro.core.metrics import evaluate_actions
 from repro.core.offline_log import build_testbed
 from repro.routing import (ConstrainedPolicy, Gateway, MLPPolicy, Request,
-                           SimulatorBackend, get_slo_profile,
+                           SimulatorBackend, get_action_space,
+                           get_slo_profile, list_action_spaces,
                            list_slo_profiles)
+from repro.routing.registry import DEFAULT_SPACE
 
 
-def _continuous_backend(index, mesh_spec, num_slots):
+def _continuous_backend(index, mesh_spec, num_slots, retrievers=None,
+                        cache_size: int = 0):
     """Real-model generation: ContinuousEngine over an optional mesh."""
     import jax
 
@@ -55,7 +60,8 @@ def _continuous_backend(index, mesh_spec, num_slots):
     return ContinuousEngineBackend.create(
         model, params, HashTokenizer(mcfg.vocab_size), index,
         mesh=mesh, num_slots=num_slots, max_prompt_len=192,
-        max_new_tokens=8)
+        max_new_tokens=8, retrievers=retrievers,
+        retrieval_cache_size=cache_size)
 
 
 def main():
@@ -77,13 +83,27 @@ def main():
                          "tensor-parallel on the mp (model) axis "
                          "(requires --backend continuous)")
     ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--space", default=DEFAULT_SPACE,
+                    choices=list_action_spaces(),
+                    help="registered action space to route over; "
+                         "hybrid9 adds retriever choice "
+                         "(bm25|dense|hybrid) to the action set")
+    ap.add_argument("--retrieval-cache", type=int, default=0,
+                    metavar="N", help="bounded LRU over retrieval "
+                    "results (0 = off); hit counters land in "
+                    "GatewayStats")
     args = ap.parse_args()
     if args.mesh and args.backend != "continuous":
         ap.error("--mesh requires --backend continuous")
 
+    space = get_action_space(args.space)
     cfg = TestbedConfig()
+    if space.n_actions != cfg.router.n_actions:
+        cfg = dataclasses.replace(cfg, router=dataclasses.replace(
+            cfg.router, n_actions=space.n_actions))
     profile = get_slo_profile(args.slo)
-    data, index, pipe, train_log, eval_log = build_testbed(cfg)
+    data, index, pipe, train_log, eval_log = build_testbed(
+        cfg, None if args.space == DEFAULT_SPACE else space)
     if args.objective == "constrained":
         policy = ConstrainedPolicy.train(train_log, train_log.rewards(profile),
                                          cfg.router,
@@ -105,11 +125,22 @@ def main():
                   f"cost={out.cost_tokens:6.0f} {status}")
 
     if args.backend == "continuous":
-        backend = _continuous_backend(index, args.mesh, args.num_slots)
+        # reuse the suite build_testbed already wired into the pipeline
+        # (it embedded the whole corpus once for non-bm25 spaces); the
+        # backend wraps it behind its own cache when requested
+        suite = (pipe.retrievers
+                 if set(space.retriever_names) - {"bm25"} else None)
+        backend = _continuous_backend(index, args.mesh, args.num_slots,
+                                      retrievers=suite,
+                                      cache_size=args.retrieval_cache)
     else:
+        if args.retrieval_cache and pipe.retrieval_cache is None:
+            from repro.retrieval.hybrid import resolve_retrievers
+            pipe.retrievers, pipe.retrieval_cache = resolve_retrievers(
+                pipe.retrievers, index, cache_size=args.retrieval_cache)
         backend = SimulatorBackend(pipe)
     gateway = Gateway(policy, backend, router_cfg=cfg.router,
-                      index=index, max_batch=16,
+                      index=index, max_batch=16, action_space=space,
                       adaptive_refusal=args.adaptive, on_outcome=report)
 
     eval_q = data.questions[-cfg.n_eval:][: args.n]
@@ -119,6 +150,9 @@ def main():
                            for q in eval_q])
     print(f"# served={stats.served} avg_reward={stats.avg_reward:+.4f} "
           f"actions={dict(sorted(stats.action_counts.items()))}")
+    if stats.retrieval_cache_lookups:
+        print(f"# retrieval cache: {stats.retrieval_cache_hits}"
+              f"/{stats.retrieval_cache_lookups} hits")
     es = gateway.engine_stats
     if es is not None:
         print(f"# engine: prefills={es.n_prefills} "

@@ -1,3 +1,30 @@
-from repro.retrieval.bm25 import BM25Index
+"""Multi-method retrieval subsystem.
 
-__all__ = ["BM25Index"]
+* ``bm25.py``        — sparse lexical BM25 over a hashed vocab;
+* ``dense.py``       — dense retrieval over hashed n-gram embeddings
+  (Pallas fused score+top-k kernel in ``repro.kernels.dense_topk``);
+* ``hybrid.py``      — the :class:`Retriever` protocol, weighted/RRF
+  fusion, and the bounded LRU retrieval cache;
+* ``distributed.py`` — corpus sharded over the mesh's data axis, one
+  local-top-k → all-gather → merge path shared by BM25 and dense.
+"""
+from repro.retrieval.bm25 import BM25Index
+from repro.retrieval.dense import DenseIndex, embed_text
+from repro.retrieval.distributed import (DistributedBM25,
+                                         DistributedDenseIndex,
+                                         distributed_bm25_topk,
+                                         distributed_dense_topk,
+                                         distributed_topk)
+from repro.retrieval.hybrid import (CachedRetriever, HybridRetriever,
+                                    IndexRetriever, RetrievalCache,
+                                    Retriever, build_retriever_suite,
+                                    resolve_retrievers)
+
+__all__ = [
+    "BM25Index", "DenseIndex", "embed_text",
+    "DistributedBM25", "DistributedDenseIndex", "distributed_topk",
+    "distributed_bm25_topk", "distributed_dense_topk",
+    "Retriever", "IndexRetriever", "HybridRetriever",
+    "RetrievalCache", "CachedRetriever",
+    "build_retriever_suite", "resolve_retrievers",
+]

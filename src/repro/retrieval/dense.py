@@ -1,0 +1,109 @@
+"""Dense vector retrieval over deterministic hashed n-gram embeddings.
+
+No external embedding model ships in this container (same gate that
+makes BM25 use a hashed vocab), so the encoder is a signed feature-hash
+of word uni+bigrams: each n-gram adds ±1 (±0.5 for bigrams) to a hashed
+bucket, with the sign drawn from an independent hash bit so collisions
+cancel in expectation [Weinberger et al. 2009].  Rows are L2-normalized,
+making the doc-matrix contraction a cosine similarity.  The embedding
+dim is 128-aligned (``RetrievalConfig.dense_embed_dim``) so the (D, E)
+matrix feeds the MXU-blocked Pallas kernel directly.
+
+Scoring paths, mirroring ``bm25.py``:
+
+* ``scores_np`` / ``topk`` — numpy oracle for the host serving path;
+* ``topk_batch`` — the fused Pallas score+top-k kernel
+  (``repro.kernels.dense_topk``): blocked similarity with an online
+  partial-top-k reduction, never materializing the (Q, D) matrix;
+* sharding — ``repro.retrieval.distributed.DistributedDenseIndex``
+  shards the doc matrix over the mesh's data axis and merges local
+  top-k candidate sets.
+
+The lexical (BM25) and dense views rank genuinely differently: BM25 is
+driven by exact-term idf weighting, the dense encoder by signed n-gram
+overlap incl. bigram order — which is what makes retriever choice a
+real routing action (see ``retrieval/hybrid.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.config import RetrievalConfig
+from repro.data.tokenizer import words, _h
+
+
+def _signed(token: str, dim: int, v: np.ndarray, weight: float) -> None:
+    # independent hash bit for the sign (salted so it does not correlate
+    # with the bucket index)
+    sign = 1.0 if _h(token + "#sgn", 2) else -1.0
+    v[_h(token, dim)] += weight * sign
+
+
+def embed_text(text: str, dim: int) -> np.ndarray:
+    """Deterministic signed hashed uni+bigram embedding, L2-normalized."""
+    v = np.zeros(dim, np.float32)
+    ws = words(text)
+    for i, w in enumerate(ws):
+        _signed(w, dim, v, 1.0)
+        if i + 1 < len(ws):
+            _signed(w + "_" + ws[i + 1], dim, v, 0.5)
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+@dataclass
+class DenseIndex:
+    cfg: RetrievalConfig
+    emb: np.ndarray          # (D, E) float32, rows L2-normalized
+    texts: List[str]
+
+    @classmethod
+    def build(cls, docs: Sequence[str],
+              cfg: RetrievalConfig = RetrievalConfig()) -> "DenseIndex":
+        E = cfg.dense_embed_dim
+        emb = np.stack([embed_text(doc, E) for doc in docs]) if docs \
+            else np.zeros((0, E), np.float32)
+        return cls(cfg, emb.astype(np.float32), list(docs))
+
+    def encode(self, query: str) -> np.ndarray:
+        return embed_text(query, self.cfg.dense_embed_dim)
+
+    # ------------------------------------------------------------------
+    # scoring
+    # ------------------------------------------------------------------
+    def scores_np(self, qe: np.ndarray) -> np.ndarray:
+        """Reference numpy cosine scores for one query (E,) -> (D,)."""
+        return self.emb @ qe
+
+    def topk(self, query: str, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(indices, scores) of the top-k docs — numpy oracle path.
+
+        Exact ``lax.top_k`` semantics including ties: a full
+        (-score, doc id) lexsort, so exact-score ties break toward the
+        lower doc id even when they straddle the k boundary (an
+        argpartition would pick arbitrary tie members there and diverge
+        from the kernel/distributed paths).  O(D log D) on the host is
+        noise at serving corpus sizes.
+        """
+        if k <= 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.float32)
+        s = self.scores_np(self.encode(query))
+        k = min(k, len(s))
+        idx = np.lexsort((np.arange(len(s)), -s))[:k]
+        return idx, s[idx]
+
+    def topk_batch(self, queries: Sequence[str], k: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched top-k through the fused Pallas kernel.
+
+        Returns (ids (Q, k) int64, scores (Q, k) float32).  The blocked
+        kernel folds each score tile into a running per-query top-k in
+        VMEM — the full (Q, D) similarity matrix never materializes.
+        """
+        from repro.kernels import dense_topk
+        qe = np.stack([self.encode(q) for q in queries])
+        s, i = dense_topk(qe, self.emb, k=min(k, len(self.texts)))
+        return np.asarray(i, np.int64), np.asarray(s)

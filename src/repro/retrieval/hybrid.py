@@ -1,0 +1,241 @@
+"""The Retriever protocol, hybrid fusion, and the serving-side cache.
+
+Everything that executes a routed action's retrieval step goes through
+one protocol: ``topk(query, k) -> (ids, scores)`` plus
+``passages(query, k) -> texts``.  ``RAGPipeline.retrieve`` and
+``EngineBackend._retrieve`` both consume it (they used to duplicate the
+BM25 topk→texts logic), and ``Action.retriever`` names which registered
+retriever an action uses — retriever choice is a routing action, the
+same cost/quality lever as depth ("Cost-Aware Query Routing in RAG").
+
+* :class:`IndexRetriever` — adapts any index with ``topk`` + ``texts``
+  (:class:`~repro.retrieval.bm25.BM25Index`,
+  :class:`~repro.retrieval.dense.DenseIndex`);
+* :class:`HybridRetriever` — weighted / reciprocal-rank fusion of two
+  or more candidate sets, deterministic (ties break by doc id);
+* :class:`RetrievalCache` + :class:`CachedRetriever` — a bounded LRU
+  keyed by (query, retriever, k) in front of any retriever; repeated
+  queries in a serving stream stop re-scoring the whole corpus, and
+  hit counters surface in ``GatewayStats``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import (Dict, List, Mapping, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+
+@runtime_checkable
+class Retriever(Protocol):
+    """One named way to turn a query into ranked passages."""
+
+    name: str
+
+    def topk(self, query: str, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(doc ids, scores), scores descending."""
+        ...
+
+    def passages(self, query: str, k: int) -> List[str]:
+        """The top-k passage texts (what the prompt builder consumes)."""
+        ...
+
+
+class IndexRetriever:
+    """Adapter over any index exposing ``topk(query, k)`` + ``texts``."""
+
+    def __init__(self, name: str, index):
+        self.name = name
+        self.index = index
+
+    def topk(self, query: str, k: int):
+        return self.index.topk(query, k)
+
+    def passages(self, query: str, k: int) -> List[str]:
+        if k <= 0:
+            return []
+        idx, _ = self.index.topk(query, k)
+        return [self.index.texts[i] for i in idx]
+
+
+class HybridRetriever:
+    """Fuse candidate sets from several retrievers into one ranking.
+
+    Each sub-retriever contributes its top-``k * candidate_mult`` docs;
+    fusion is either
+
+    * ``rrf`` — reciprocal rank fusion, score(d) = Σ_r w_r / (c + rank)
+      [Cormack et al. 2009]: rank-only, so BM25's unbounded scores and
+      the dense retriever's cosines need no calibration; or
+    * ``weighted`` — min-max normalize each candidate list's scores to
+      [0, 1], then a weighted sum.
+
+    Deterministic: fused ties break toward the lower doc id, and
+    iteration order over sub-retrievers is fixed by construction.
+    """
+
+    def __init__(self, retrievers: Sequence[Retriever], texts: List[str],
+                 *, name: str = "hybrid", method: str = "rrf",
+                 weights: Optional[Sequence[float]] = None,
+                 rrf_c: int = 60, candidate_mult: int = 2):
+        if method not in ("rrf", "weighted"):
+            raise ValueError(f"unknown fusion method {method!r}")
+        self.name = name
+        self.retrievers = list(retrievers)
+        self.texts = texts
+        self.method = method
+        self.weights = (list(weights) if weights is not None
+                        else [1.0] * len(self.retrievers))
+        assert len(self.weights) == len(self.retrievers)
+        self.rrf_c = rrf_c
+        self.candidate_mult = candidate_mult
+
+    def _fused(self, query: str, k: int) -> Dict[int, float]:
+        depth = max(k * self.candidate_mult, k)
+        fused: Dict[int, float] = {}
+        for r, w in zip(self.retrievers, self.weights):
+            ids, scores = r.topk(query, depth)
+            if len(ids) == 0:
+                continue
+            if self.method == "rrf":
+                contrib = [w / (self.rrf_c + rank + 1)
+                           for rank in range(len(ids))]
+            else:
+                s = np.asarray(scores, np.float64)
+                span = float(s.max() - s.min())
+                norm = (s - s.min()) / span if span > 0 \
+                    else np.ones_like(s)
+                contrib = (w * norm).tolist()
+            for d, c in zip(np.asarray(ids).tolist(), contrib):
+                fused[int(d)] = fused.get(int(d), 0.0) + c
+        return fused
+
+    def topk(self, query: str, k: int):
+        if k <= 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.float32)
+        fused = self._fused(query, k)
+        # sort by fused score desc, then doc id asc (deterministic)
+        order = sorted(fused.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+        ids = np.array([d for d, _ in order], np.int64)
+        scores = np.array([s for _, s in order], np.float32)
+        return ids, scores
+
+    def passages(self, query: str, k: int) -> List[str]:
+        idx, _ = self.topk(query, k)
+        return [self.texts[i] for i in idx]
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+class RetrievalCache:
+    """Bounded LRU over retrieval results, shared across retrievers.
+
+    Keys are ``(query, retriever_name, k)``; values are whatever the
+    wrapped call returned (passage lists / topk tuples are immutable in
+    practice — treat them as frozen).  ``hits``/``lookups`` feed
+    ``GatewayStats.retrieval_cache_{hits,lookups}``.
+    """
+
+    def __init__(self, maxsize: int = 1024):
+        assert maxsize > 0, maxsize
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.lookups = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key):
+        self.lookups += 1
+        if key in self._d:
+            self.hits += 1
+            self._d.move_to_end(key)
+            return self._d[key]
+        return None
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+
+class CachedRetriever:
+    """LRU front for any :class:`Retriever` (keyed query × name × k)."""
+
+    def __init__(self, inner: Retriever, cache: RetrievalCache):
+        self.inner = inner
+        self.name = inner.name
+        self.cache = cache
+
+    def topk(self, query: str, k: int):
+        key = (query, self.name, k, "topk")
+        out = self.cache.get(key)
+        if out is None:
+            out = self.inner.topk(query, k)
+            self.cache.put(key, out)
+        return out
+
+    def passages(self, query: str, k: int) -> List[str]:
+        key = (query, self.name, k, "passages")
+        out = self.cache.get(key)
+        if out is None:
+            out = self.inner.passages(query, k)
+            self.cache.put(key, out)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Construction helpers (shared by RAGPipeline and the engine backends)
+# ---------------------------------------------------------------------------
+
+
+def build_retriever_suite(index, dense_index=None, *,
+                          method: Optional[str] = None,
+                          alpha: Optional[float] = None
+                          ) -> Dict[str, Retriever]:
+    """The standard named-retriever set over one corpus.
+
+    ``bm25`` always; ``dense`` and ``hybrid`` (bm25 + dense fusion)
+    when a :class:`~repro.retrieval.dense.DenseIndex` is given.  Fusion
+    method/weights default from the index's ``RetrievalConfig``.
+    """
+    bm25 = IndexRetriever("bm25", index)
+    suite: Dict[str, Retriever] = {"bm25": bm25}
+    if dense_index is not None:
+        dense = IndexRetriever("dense", dense_index)
+        cfg = getattr(dense_index, "cfg", None)
+        method = method or getattr(cfg, "hybrid_method", "rrf")
+        a = alpha if alpha is not None else getattr(cfg, "hybrid_alpha", 0.5)
+        suite["dense"] = dense
+        suite["hybrid"] = HybridRetriever(
+            [bm25, dense], dense_index.texts, method=method,
+            weights=[a, 1.0 - a])
+    return suite
+
+
+def resolve_retrievers(retrievers: Optional[Mapping[str, Retriever]],
+                       index, *, cache_size: int = 0
+                       ) -> Tuple[Dict[str, Retriever],
+                                  Optional[RetrievalCache]]:
+    """Normalize an executor's retriever config.
+
+    ``retrievers=None`` gives the bm25-only default over ``index`` (the
+    seed behaviour, bit-for-bit); ``cache_size > 0`` wraps every
+    retriever behind ONE shared bounded LRU and returns it so serving
+    stats can report hit rates.
+    """
+    if retrievers is None:
+        retrievers = {"bm25": IndexRetriever("bm25", index)}
+    retrievers = dict(retrievers)
+    cache = None
+    if cache_size > 0:
+        cache = RetrievalCache(cache_size)
+        retrievers = {name: CachedRetriever(r, cache)
+                      for name, r in retrievers.items()}
+    return retrievers, cache

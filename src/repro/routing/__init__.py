@@ -15,9 +15,11 @@ from __future__ import annotations
 import importlib
 
 from repro.routing.registry import (Action, ActionSpace, DEFAULT_SPACE,
-                                    PAPER_ACTION_SPACE, get_action_space,
-                                    get_slo_profile, list_action_spaces,
-                                    list_slo_profiles, register_action_space,
+                                    HYBRID9_SPACE, PAPER_ACTION_SPACE,
+                                    SPACE_DEFAULT_PROFILES,
+                                    get_action_space, get_slo_profile,
+                                    list_action_spaces, list_slo_profiles,
+                                    register_action_space,
                                     register_slo_profile,
                                     slo_profile_from_config)
 
@@ -43,7 +45,8 @@ _LAZY = {
     "Request": "repro.routing.gateway",
 }
 
-__all__ = ["Action", "ActionSpace", "DEFAULT_SPACE", "PAPER_ACTION_SPACE",
+__all__ = ["Action", "ActionSpace", "DEFAULT_SPACE", "HYBRID9_SPACE",
+           "PAPER_ACTION_SPACE", "SPACE_DEFAULT_PROFILES",
            "get_action_space", "get_slo_profile", "list_action_spaces",
            "list_slo_profiles", "register_action_space",
            "register_slo_profile", "slo_profile_from_config",

@@ -41,6 +41,12 @@ class SimulatorBackend:
     def index(self):
         return self.pipeline.index
 
+    @property
+    def retrieval_cache(self):
+        """The pipeline's shared retrieval LRU (None when uncached) —
+        the Gateway mirrors its hit counters into GatewayStats."""
+        return self.pipeline.retrieval_cache
+
     def execute_batch(self, questions: Sequence[Question],
                       action: Action) -> List[ActionOutcome]:
         return [self.pipeline.execute(q, action) for q in questions]

@@ -23,12 +23,13 @@ anyway count as hallucinations), exactly as the old serve driver did.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 from repro.data.synthetic_squad import Question
 from repro.data.tokenizer import HashTokenizer
 from repro.generation.prompts import REFUSAL_TEXT, build_prompt
 from repro.retrieval.bm25 import BM25Index
+from repro.retrieval.hybrid import Retriever, resolve_retrievers
 from repro.routing.registry import Action
 from repro.serving.engine import Engine
 from repro.serving.pipeline import ActionOutcome
@@ -42,23 +43,37 @@ class EngineBackend:
 
     def __init__(self, engine: Engine, tokenizer: HashTokenizer,
                  index: BM25Index, *, max_prompt_len: int = 384,
-                 max_new_tokens: int = 8):
+                 max_new_tokens: int = 8,
+                 retrievers: Optional[Mapping[str, Retriever]] = None,
+                 retrieval_cache_size: int = 0):
         self.engine = engine
         self.tok = tokenizer
         self.index = index
         self.max_prompt_len = max_prompt_len
         self.max_new_tokens = max_new_tokens
+        # the same named-retriever protocol the simulator pipeline uses
+        # (None = bm25-only over `index`, the seed behaviour); a shared
+        # bounded LRU fronts them when retrieval_cache_size > 0
+        self.retrievers, self.retrieval_cache = resolve_retrievers(
+            retrievers, index, cache_size=retrieval_cache_size)
 
-    def _retrieve(self, question: str, k: int) -> List[str]:
+    def _retrieve(self, question: str, k: int,
+                  retriever: str = "bm25") -> List[str]:
         if k <= 0:
             return []
-        idx, _ = self.index.topk(question, k)
-        return [self.index.texts[i] for i in idx]
+        try:
+            r = self.retrievers[retriever]
+        except KeyError:
+            raise KeyError(
+                f"action retriever {retriever!r} not configured; "
+                f"available: {sorted(self.retrievers)}") from None
+        return r.passages(question, k)
 
     def _prep(self, q: Question, action: Action) -> Tuple[List[int], bool]:
-        """Retrieve at the action's depth and build the prompt tokens.
-        Returns (token ids padded to max_prompt_len, retrieval hit)."""
-        passages = self._retrieve(q.text, action.k)
+        """Retrieve with the action's retriever at its depth and build
+        the prompt tokens.  Returns (token ids padded to
+        max_prompt_len, retrieval hit)."""
+        passages = self._retrieve(q.text, action.k, action.retriever)
         hit = bool(q.gold_answer) and any(
             q.gold_answer in p for p in passages)
         prompt = build_prompt(action.mode, q.text, passages)
@@ -137,6 +152,8 @@ class ContinuousEngineBackend(EngineBackend):
                num_slots: int = 8, max_prompt_len: int = 384,
                max_new_tokens: int = 8, sync_every: int = 4,
                prefill_batch: Optional[int] = None,
+               retrievers: Optional[Mapping[str, Retriever]] = None,
+               retrieval_cache_size: int = 0,
                **engine_kw) -> "ContinuousEngineBackend":
         """Build a :class:`~repro.serving.continuous.ContinuousEngine`
         sized for this backend's prompts and wrap it.
@@ -158,7 +175,8 @@ class ContinuousEngineBackend(EngineBackend):
                            else prefill_batch),
             mesh=mesh, executor=executor, **engine_kw)
         return cls(engine, tokenizer, index, max_prompt_len=max_prompt_len,
-                   max_new_tokens=max_new_tokens)
+                   max_new_tokens=max_new_tokens, retrievers=retrievers,
+                   retrieval_cache_size=retrieval_cache_size)
 
     def execute_mixed(self, questions: Sequence[Question],
                       actions: Sequence[Action]) -> List[ActionOutcome]:

@@ -55,6 +55,11 @@ class GatewayStats:
     # masquerade as deliberate refusal behaviour
     rejected: int = 0
     total_reward: float = 0.0
+    # mirrors of the backend's shared retrieval LRU counters (0/0 when
+    # the backend serves uncached) — repeated queries in a stream stop
+    # re-scoring the corpus, and the hit rate shows up here
+    retrieval_cache_hits: int = 0
+    retrieval_cache_lookups: int = 0
     action_counts: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
     refusal_cap_history: List[float] = field(default_factory=list)
     # bounded ring of recent decisions (O(1) trim in long runs)
@@ -137,6 +142,12 @@ class Gateway:
         if self.on_outcome is not None:
             self.on_outcome(r, action, out, rew)
 
+    def _sync_cache_stats(self) -> None:
+        cache = getattr(self.backend, "retrieval_cache", None)
+        if cache is not None:
+            self.stats.retrieval_cache_hits = cache.hits
+            self.stats.retrieval_cache_lookups = cache.lookups
+
     def step(self) -> Optional[GatewayStats]:
         """Serve one micro-batch off the queue."""
         if not self.queue:
@@ -164,6 +175,7 @@ class Gateway:
             lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(batch), 1)
             for r, a, out in zip(batch, acts, outs):
                 self._account(r, a, out, lat_ms)
+            self._sync_cache_stats()
             return self.stats
 
         # bucket by action so each retrieval depth / generation mode
@@ -180,6 +192,7 @@ class Gateway:
             lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(idxs), 1)
             for i, out in zip(idxs, outs):
                 self._account(batch[i], a, out, lat_ms)
+        self._sync_cache_stats()
         return self.stats
 
     def drain(self) -> GatewayStats:

@@ -35,6 +35,10 @@ class Action:
     idx: int
     k: int            # retrieval depth (0 = no retrieval)
     mode: str         # guarded | auto | refuse
+    # which registered retriever serves this action's depth-k lookup
+    # (the second big cost/quality lever after depth; "bm25" keeps the
+    # paper's single-retriever space bit-for-bit)
+    retriever: str = "bm25"
 
 
 @dataclass(frozen=True)
@@ -60,6 +64,9 @@ class ActionSpace:
             if a.mode == "refuse" and a.k != 0:
                 raise ValueError(
                     f"{self.name!r}: refuse action {pos} must have k=0")
+            if not a.retriever:
+                raise ValueError(
+                    f"{self.name!r}: action {pos} has empty retriever")
 
     @property
     def n_actions(self) -> int:
@@ -90,13 +97,25 @@ class ActionSpace:
     def from_config(cls, cfg: Mapping) -> "ActionSpace":
         """Build from a plain dict, e.g. parsed JSON/YAML.
 
-        ``{"name": ..., "actions": [{"k": 5, "mode": "guarded"}, ...]}``
-        (``idx`` is optional and defaults to the list position).
+        ``{"name": ..., "actions": [{"k": 5, "mode": "guarded",
+        "retriever": "dense"}, ...]}`` (``idx`` defaults to the list
+        position, ``retriever`` to ``"bm25"``).
         """
         actions = tuple(
-            Action(int(a.get("idx", i)), int(a["k"]), str(a["mode"]))
+            Action(int(a.get("idx", i)), int(a["k"]), str(a["mode"]),
+                   str(a.get("retriever", "bm25")))
             for i, a in enumerate(cfg["actions"]))
         return cls(str(cfg["name"]), actions)
+
+    @property
+    def retriever_names(self) -> Tuple[str, ...]:
+        """Retrievers this space's non-refuse actions reference (the
+        set an executor must be able to resolve), in first-use order."""
+        seen = []
+        for a in self.actions:
+            if a.mode != "refuse" and a.retriever not in seen:
+                seen.append(a.retriever)
+        return tuple(seen)
 
 
 # ---------------------------------------------------------------------------
@@ -180,3 +199,39 @@ register_slo_profile(SLOProfile(
 register_slo_profile(SLOProfile(
     name="cheap",
     w_acc=0.3, w_cost=0.8, w_hall=0.3, w_ref=0.35, w_ref_wrong=1.0))
+
+
+# ---------------------------------------------------------------------------
+# hybrid9: retriever choice as a routing action (beyond paper).
+#
+# The paper varies only DEPTH over one BM25 index; hybrid9 adds the
+# other big cost/quality lever — WHICH retriever — crossing
+# {bm25, dense, hybrid} × depth × {guarded, auto} (+ refuse).  The
+# refuse action stays last, so the constrained objective's Lagrangian
+# and the Gateway's cap logic carry over via ``space.refuse_action``.
+#
+# NOTE: the profile registry is deliberately NOT extended here — every
+# registered profile feeds run_experiment's grid, and adding entries at
+# import would silently change the paper tables.  hybrid9 serves under
+# the paper's own profiles (SPACE_DEFAULT_PROFILES below); register
+# bespoke profiles explicitly from config where needed.
+# ---------------------------------------------------------------------------
+
+HYBRID9_SPACE = register_action_space(ActionSpace(
+    "hybrid9",
+    (Action(0, 2, "guarded", "bm25"),
+     Action(1, 5, "guarded", "bm25"),
+     Action(2, 2, "guarded", "dense"),
+     Action(3, 5, "guarded", "dense"),
+     Action(4, 2, "guarded", "hybrid"),
+     Action(5, 5, "guarded", "hybrid"),
+     Action(6, 5, "auto", "bm25"),
+     Action(7, 5, "auto", "hybrid"),
+     Action(8, 0, "refuse"))))
+
+# the SLO profiles each registered space is evaluated/served under by
+# default (benchmarks' objective-ablation grids iterate these)
+SPACE_DEFAULT_PROFILES: Dict[str, Tuple[str, ...]] = {
+    "paper5": ("quality_first", "cheap"),
+    "hybrid9": ("quality_first", "cheap"),
+}

@@ -9,7 +9,7 @@ pipeline sits behind ``repro.routing.backends.SimulatorBackend``.
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -18,6 +18,7 @@ from repro.routing.registry import ActionSpace, get_action_space
 from repro.data.synthetic_squad import Question
 from repro.generation.simulator import SimulatedGenerator
 from repro.retrieval.bm25 import BM25Index
+from repro.retrieval.hybrid import Retriever, resolve_retrievers
 
 
 @dataclass
@@ -42,22 +43,35 @@ class ActionOutcome:
 
 
 class RAGPipeline:
-    def __init__(self, index: BM25Index, generator: SimulatedGenerator):
+    def __init__(self, index: BM25Index, generator: SimulatedGenerator,
+                 retrievers: Optional[Mapping[str, Retriever]] = None,
+                 *, retrieval_cache_size: int = 0):
         self.index = index
         self.generator = generator
+        # named retrievers behind the shared protocol; None = the
+        # bm25-only seed behaviour (bit-for-bit).  cache_size > 0 puts
+        # one bounded LRU in front of every retriever.
+        self.retrievers, self.retrieval_cache = resolve_retrievers(
+            retrievers, index, cache_size=retrieval_cache_size)
 
-    def retrieve(self, question: str, k: int) -> Sequence[str]:
+    def retrieve(self, question: str, k: int,
+                 retriever: str = "bm25") -> Sequence[str]:
         if k <= 0:
             return []
-        idx, _ = self.index.topk(question, k)
-        return [self.index.texts[i] for i in idx]
+        try:
+            r = self.retrievers[retriever]
+        except KeyError:
+            raise KeyError(
+                f"action retriever {retriever!r} not configured; "
+                f"available: {sorted(self.retrievers)}") from None
+        return r.passages(question, k)
 
     def execute(self, q: Question, action: Action) -> ActionOutcome:
         if action.mode == "refuse":
             out = self.generator.refuse(q.qid, q.text)
             hit = False
         else:
-            passages = self.retrieve(q.text, action.k)
+            passages = self.retrieve(q.text, action.k, action.retriever)
             out = self.generator.generate(
                 q.qid, action.idx, action.mode, q.text, passages,
                 answerable=q.answerable, gold_answer=q.gold_answer)

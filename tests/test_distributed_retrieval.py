@@ -22,7 +22,7 @@ mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
 dist = DistributedBM25(mesh, idx.tf, idx.doc_len, idx.idf)
 
 qv = np.stack([idx.query_vector(q.text) for q in data.questions])
-scores, ids = dist.topk(qv, k=10)
+ids, scores = dist.topk(qv, k=10)
 for qi, q in enumerate(data.questions):
     ref_ids, ref_scores = idx.topk(q.text, 10)
     got, want = set(ids[qi].tolist()), set(ref_ids.tolist())
