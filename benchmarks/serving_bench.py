@@ -72,6 +72,7 @@ from repro.retrieval.bm25 import BM25Index
 from repro.routing.registry import get_action_space
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Engine
+from repro.serving.slo_budget import LatencyReservoir
 
 N_REQUESTS = 32
 GATEWAY_BATCH = 16     # Gateway.step micro-batch (the old serving unit)
@@ -160,6 +161,62 @@ def run_continuous(engine, workload, prefill_only=False):
         useful += sum(done[r].n_steps for r in rids)
         lat += [(done[r].finished_at - t0) * 1e3 for r in rids]
     return useful, time.perf_counter() - t0, lat
+
+
+# --- open-loop serving: offered-load sweep, goodput under SLO ---------------
+
+# offered rates (req/s of *virtual* time) swept against the smoke
+# model: low -> comfortable, high -> over-offered so shedding engages
+OPEN_LOOP_RATES = (25.0, 100.0, 400.0, 1600.0)
+OPEN_LOOP_N = 96             # requests per rate (seeded Poisson trace)
+OPEN_LOOP_DEADLINE_MS = 250.0
+OPEN_LOOP_QUANTUM_S = 0.01   # virtual seconds charged per gateway pump
+
+
+def run_open_loop(model, mcfg, params) -> dict:
+    """Seeded Poisson traces through AsyncGateway over the continuous
+    engine in VIRTUAL time: per offered rate, one goodput-under-SLO +
+    p50/p99-latency row.  Deterministic — same seed, same rows — so the
+    CI smoke job can assert on the artifact."""
+    import numpy as _np
+    from repro.core.config import RetrievalConfig as _RC
+    from repro.routing import FixedPolicy
+    from repro.routing.engine_backend import ContinuousEngineBackend
+    from repro.serving.streaming import AdmissionConfig, AsyncGateway
+    from repro.serving.traffic import sweep_offered_load
+
+    data = SyntheticSquad(n_paragraphs=120, n_questions=24, seed=0)
+    index = BM25Index.build([p.text for p in data.paragraphs],
+                            _RC(vocab_hash_dim=1024))
+
+    def make_gateway(clock):
+        backend = ContinuousEngineBackend.create(
+            model, params, HashTokenizer(mcfg.vocab_size), index,
+            num_slots=NUM_SLOTS, max_prompt_len=MAX_PROMPT,
+            max_new_tokens=8, sync_every=SYNC_EVERY, clock=clock.now)
+        return AsyncGateway(
+            FixedPolicy(1), backend,
+            state_fn=lambda qs: _np.zeros((len(qs), 1)),
+            clock=clock.now, deadline_ms=OPEN_LOOP_DEADLINE_MS,
+            admission=AdmissionConfig(max_backlog=3 * NUM_SLOTS))
+
+    rows = sweep_offered_load(
+        make_gateway, data.questions, list(OPEN_LOOP_RATES),
+        n_requests=OPEN_LOOP_N, deadline_ms=OPEN_LOOP_DEADLINE_MS,
+        seed=0, service_quantum_s=OPEN_LOOP_QUANTUM_S)
+    for r in rows:
+        print(f"open-loop rate={r['rate']:7.1f}/s  "
+              f"goodput={r['goodput']:7.2f}/s  shed={r['shed']:3d}  "
+              f"p50={r['latency_p50_ms']}ms p99={r['latency_p99_ms']}ms")
+    return {
+        "deadline_ms": OPEN_LOOP_DEADLINE_MS, "n_per_rate": OPEN_LOOP_N,
+        "num_slots": NUM_SLOTS, "arrival": "poisson(seed=0)",
+        "service_quantum_s": OPEN_LOOP_QUANTUM_S,
+        "rows": rows,
+        # headline: shedding engages under over-offered load
+        "shed_at_max_rate": rows[-1]["shed"],
+        "shed_at_min_rate": rows[0]["shed"],
+    }
 
 
 def _one_device_mesh():
@@ -306,14 +363,21 @@ def main(mesh_probe: str = "dp=8", mp_probe: str = "dp=4,mp=2") -> dict:
         tok_full, t_full, lat = best[name]["full"]
         decode_tok = best[name]["decode_tok"]
         decode_t = best[name]["decode_t"]
+        # the one shared home for serving percentiles (p50/p95/p99) —
+        # no more ad-hoc np.percentile math per bench
+        res = LatencyReservoir()
+        res.extend(lat)
+        pct = res.percentiles()
         out[name] = {
             "tokens": tok_full,
             "wall_s": round(t_full, 4),
             "tokens_per_s": round(tok_full / t_full, 1),
             "decode_tokens_per_s": round(decode_tok / decode_t, 1),
-            "latency_ms_mean": round(float(np.mean(lat)), 1),
-            "latency_ms_p50": round(float(np.percentile(lat, 50)), 1),
-            "latency_ms_max": round(float(np.max(lat)), 1),
+            "latency_ms_mean": pct["mean_ms"],
+            "latency_ms_p50": pct["p50_ms"],
+            "latency_ms_p95": pct["p95_ms"],
+            "latency_ms_p99": pct["p99_ms"],
+            "latency_ms_max": pct["max_ms"],
         }
         print(name, out[name])
 
@@ -347,12 +411,34 @@ def main(mesh_probe: str = "dp=8", mp_probe: str = "dp=4,mp=2") -> dict:
         print(f"# forced-device tensor-parallel probe ({mp_probe}) ...")
         out["continuous_sharded_mp"] = _sharded_probe(mp_probe)
         print("probe:", out["continuous_sharded_mp"])
+    print("# open-loop offered-load sweep ...")
+    out["open_loop"] = run_open_loop(model, mcfg, params)
     save_artifact("BENCH_serving", out)
     # the repo-root copy is the perf-trajectory entry point
     (Path(__file__).resolve().parents[1] / "BENCH_serving.json").write_text(
         json.dumps(out, indent=1))
     return {"decode_speedup": out["decode_speedup"],
             "sharded_1dev_decode_ratio": out["sharded_1dev_decode_ratio"]}
+
+
+def open_loop_main() -> dict:
+    """Just the open-loop sweep (the CI traffic-harness smoke): merge
+    the ``open_loop`` key into BENCH_serving.json, preserving whatever
+    engine rows a full run already wrote."""
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    open_loop = run_open_loop(model, mcfg, params)
+    root = Path(__file__).resolve().parents[1]
+    out = {}
+    target = root / "BENCH_serving.json"
+    if target.exists():
+        out = json.loads(target.read_text())
+    out["open_loop"] = open_loop
+    save_artifact("BENCH_serving", out)
+    target.write_text(json.dumps(out, indent=1))
+    return open_loop
 
 
 if __name__ == "__main__":
@@ -365,9 +451,14 @@ if __name__ == "__main__":
                     help="dp×mp tensor-parallel probe — writes the "
                          "continuous_sharded_mp engine row (empty string "
                          "skips it)")
+    ap.add_argument("--open-loop-only", action="store_true",
+                    help="run only the open-loop offered-load sweep and "
+                         "merge it into BENCH_serving.json (CI smoke)")
     ap.add_argument("--probe", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.probe:
         probe_main(args.probe)
+    elif args.open_loop_only:
+        open_loop_main()
     else:
         print(main(mesh_probe=args.mesh, mp_probe=args.mesh_mp))

@@ -34,9 +34,9 @@ def main():
               f"refusal_share={gw.refusal_share:.2f} "
               f"avg_reward={stats.avg_reward:+.4f}")
         for name, rep in gw.budget.report().items():
-            print(f"    budget {name:13s} violation={rep['violation_rate']:.3f}"
-                  f" consumed={rep['budget_consumed']:5.2f}"
-                  f" healthy={rep['healthy']}")
+            print(f"    budget {name:13s} violation={rep.violation_rate:.3f}"
+                  f" consumed={rep.budget_consumed:5.2f}"
+                  f" healthy={rep.healthy}")
 
 
 if __name__ == "__main__":

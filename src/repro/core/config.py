@@ -89,6 +89,12 @@ class ModelConfig:
     # flash-decode kernel (split-KV online softmax over the slot cache
     # with per-slot length masking); dense jnp path is the oracle
     use_flash_decode: bool = False
+    # store GQA decode caches int8 with per-(batch, pos, head) f16
+    # absmax scales (serving/kv_quant.py): ~2x less cache HBM + read
+    # traffic at a dequant multiply per read.  Applies to the standard
+    # slot-cache path (not ring-buffer windowed layers, not MLA);
+    # greedy decode parity is smoke-tested at smoke-model scale
+    kv_quant_int8: bool = False
     # §Perf H6: one-hot-matmul embedding lookup instead of gather — XLA
     # SPMD can keep a (vocab->model, d->data)-sharded table sharded for
     # a matmul but replicates it for a gather; trades extra MXU flops

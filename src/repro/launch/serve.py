@@ -41,7 +41,7 @@ from repro.routing.registry import DEFAULT_SPACE
 
 
 def _continuous_backend(index, mesh_spec, num_slots, retrievers=None,
-                        cache_size: int = 0):
+                        cache_size: int = 0, clock=None):
     """Real-model generation: ContinuousEngine over an optional mesh."""
     import jax
 
@@ -57,11 +57,44 @@ def _continuous_backend(index, mesh_spec, num_slots, retrievers=None,
     # model_cfg: fail fast if mp doesn't divide the head/FFN dims
     mesh = (make_serving_mesh(mesh_spec, model_cfg=mcfg)
             if mesh_spec else None)
+    kw = {} if clock is None else {"clock": clock}
     return ContinuousEngineBackend.create(
         model, params, HashTokenizer(mcfg.vocab_size), index,
         mesh=mesh, num_slots=num_slots, max_prompt_len=192,
         max_new_tokens=8, retrievers=retrievers,
-        retrieval_cache_size=cache_size)
+        retrieval_cache_size=cache_size, **kw)
+
+
+def _serve_open_loop(args, policy, backend, cfg, space, index, data,
+                     clock) -> None:
+    """Open-loop mode: seeded Poisson arrivals through AsyncGateway in
+    virtual time, per-request deadlines, SLO-actuated admission."""
+    from repro.serving.streaming import AdmissionConfig, AsyncGateway
+    from repro.serving.traffic import (LoadGenerator, PoissonProcess,
+                                       build_trace)
+
+    gateway = AsyncGateway(
+        policy, backend, router_cfg=cfg.router, index=index,
+        action_space=space, adaptive_refusal=args.adaptive,
+        clock=clock.now, deadline_ms=args.deadline_ms,
+        admission=AdmissionConfig(max_backlog=4 * args.num_slots))
+    eval_q = data.questions[-cfg.n_eval:]
+    trace = build_trace(eval_q, PoissonProcess(args.open_loop, seed=0),
+                        args.n, slo=args.slo, deadline_ms=args.deadline_ms)
+    print(f"# open-loop: {args.n} arrivals at {args.open_loop}/s "
+          f"(poisson, seed 0), deadline {args.deadline_ms}ms")
+    rep = LoadGenerator(gateway, trace).run_virtual(clock)
+    print(json.dumps(rep.as_dict(), indent=1))
+    st = gateway.stats
+    print(f"# admission: shed={st.shed} forced_refusals="
+          f"{st.forced_refusals} depth_clamped={st.depth_clamped}")
+    print("# error budgets:",
+          json.dumps(gateway.budget.report_dict(), indent=1))
+    es = gateway.engine_stats
+    if es is not None:
+        print(f"# engine: prefills={es.n_prefills} "
+              f"decode_chunks={es.n_decode_chunks} "
+              f"max_concurrent={es.max_concurrent}")
 
 
 def main():
@@ -92,6 +125,13 @@ def main():
                     metavar="N", help="bounded LRU over retrieval "
                     "results (0 = off); hit counters land in "
                     "GatewayStats")
+    ap.add_argument("--open-loop", type=float, default=0.0, metavar="RATE",
+                    help="serve an open-loop seeded Poisson arrival "
+                         "stream at RATE req/s (virtual time) through "
+                         "AsyncGateway instead of the closed-loop serve")
+    ap.add_argument("--deadline-ms", type=float, default=250.0,
+                    help="per-request completion deadline for "
+                         "--open-loop (goodput counts answers within it)")
     args = ap.parse_args()
     if args.mesh and args.backend != "continuous":
         ap.error("--mesh requires --backend continuous")
@@ -124,6 +164,10 @@ def main():
                   f"(k={action.k},{action.mode:7s}) "
                   f"cost={out.cost_tokens:6.0f} {status}")
 
+    clock = None
+    if args.open_loop:
+        from repro.serving.traffic import VirtualClock
+        clock = VirtualClock()
     if args.backend == "continuous":
         # reuse the suite build_testbed already wired into the pipeline
         # (it embedded the whole corpus once for non-bm25 spaces); the
@@ -132,13 +176,19 @@ def main():
                  if set(space.retriever_names) - {"bm25"} else None)
         backend = _continuous_backend(index, args.mesh, args.num_slots,
                                       retrievers=suite,
-                                      cache_size=args.retrieval_cache)
+                                      cache_size=args.retrieval_cache,
+                                      clock=clock.now if clock else None)
     else:
         if args.retrieval_cache and pipe.retrieval_cache is None:
             from repro.retrieval.hybrid import resolve_retrievers
             pipe.retrievers, pipe.retrieval_cache = resolve_retrievers(
                 pipe.retrievers, index, cache_size=args.retrieval_cache)
-        backend = SimulatorBackend(pipe)
+        backend = SimulatorBackend(
+            pipe, **({"clock": clock.now} if clock else {}))
+    if args.open_loop:
+        _serve_open_loop(args, policy, backend, cfg, space, index, data,
+                         clock)
+        return
     gateway = Gateway(policy, backend, router_cfg=cfg.router,
                       index=index, max_batch=16, action_space=space,
                       adaptive_refusal=args.adaptive, on_outcome=report)
@@ -159,7 +209,8 @@ def main():
               f"decode_chunks={es.n_decode_chunks} "
               f"max_concurrent={es.max_concurrent} "
               f"cache_allocations={es.cache_allocations}")
-    print("# error budgets:", json.dumps(gateway.budget.report(), indent=1))
+    print("# error budgets:",
+          json.dumps(gateway.budget.report_dict(), indent=1))
 
     # offline metrics on the logged sweep for the same routed states
     acts = policy.route(eval_log.states[: args.n], args.slo).actions

@@ -217,6 +217,36 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
             ck = ck.at[bidx[:, None], slots].set(k[:, -span:].astype(ck.dtype))
             cv = cv.at[bidx[:, None], slots].set(v[:, -span:].astype(cv.dtype))
         new_cache = {"k": ck, "v": cv}
+    elif "k_q" in cache:
+        # int8-quantized slot cache (cfg.kv_quant_int8): insert this
+        # step's k/v quantized, attend over the dequantized views.  The
+        # serving layer owns the quant scheme; import here at call time
+        # so models never pulls the serving package at import time.
+        from repro.serving import kv_quant as KQ
+        if S == 1:  # decode: quantize one step, scatter at per-slot pos
+            new_cache = KQ.insert_step(cache, k, v, positions[:, 0])
+        else:       # prefill into an empty cache (positions 0..S-1)
+            kq, ks = KQ.quantize(k)
+            vq, vs = KQ.quantize(v)
+            z4 = (0, 0, 0, 0)
+            new_cache = {
+                "k_q": jax.lax.dynamic_update_slice(cache["k_q"], kq, z4),
+                "v_q": jax.lax.dynamic_update_slice(cache["v_q"], vq, z4),
+                "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks, z4),
+                "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs, z4),
+            }
+        ck, cv = KQ.read(new_cache, dtype=v.dtype)
+        kv_len = positions[:, -1] + 1
+        if (S == 1 and cfg.use_flash_decode and causal and not window
+                and not cfg.attn_logit_softcap):
+            from repro.kernels.ops import flash_decode as _flash_decode
+            out = _flash_decode(q[:, 0], ck, cv, kv_len)[:, None]
+            out = out.astype(v.dtype)
+        else:
+            out = attention(q, ck, cv, q_pos=positions, kv_len=kv_len,
+                            causal=causal, window=window,
+                            softcap=cfg.attn_logit_softcap,
+                            q_chunk=cfg.attn_q_chunk)
     else:
         ck, cv = cache["k"], cache["v"]
         bidx = jnp.arange(B)

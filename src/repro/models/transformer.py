@@ -108,7 +108,12 @@ def apply_layer(p, x, cfg: ModelConfig, s: LayerSig, *, positions,
         if nc is not None:
             new_cache.update(nc)
     else:
-        sub = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+        if cache is None:
+            sub = None
+        elif "k_q" in cache:     # int8-quantized cache (kv_quant_int8)
+            sub = {k: cache[k] for k in ("k_q", "v_q", "k_s", "v_s")}
+        else:
+            sub = {"k": cache["k"], "v": cache["v"]}
         out, nc = L.gqa_apply(p["attn"], h, cfg, positions=positions,
                               cache=sub, window=s.window, causal=s.causal,
                               ring=bool(cfg.window_ring_cache and s.window))
@@ -159,12 +164,21 @@ def _layer_cache_schema(cfg: ModelConfig, s: LayerSig, batch: int,
         # cfg.window_ring_cache those layers hold a `window`-sized ring
         # buffer instead (§Perf H4)
         span = max_len
-        if cfg.window_ring_cache and s.window:
+        ring = bool(cfg.window_ring_cache and s.window)
+        if ring:
             span = min(max_len, s.window)
-        kv = (batch, span, cfg.n_kv_heads, cfg.head_dim)
-        axes = ("batch", "seq", "kv_heads", "head_dim")
-        out["k"] = ParamSpec(kv, axes, cfg.dtype, "zeros")
-        out["v"] = ParamSpec(kv, axes, cfg.dtype, "zeros")
+        if cfg.kv_quant_int8 and not ring:
+            # int8 payload + f16 per-position scales (serving layer owns
+            # the quant scheme; lazy import keeps models free of the
+            # serving package at import time)
+            from repro.serving.kv_quant import quant_kv_cache_schema
+            out.update(quant_kv_cache_schema(batch, span, cfg.n_kv_heads,
+                                             cfg.head_dim))
+        else:
+            kv = (batch, span, cfg.n_kv_heads, cfg.head_dim)
+            axes = ("batch", "seq", "kv_heads", "head_dim")
+            out["k"] = ParamSpec(kv, axes, cfg.dtype, "zeros")
+            out["v"] = ParamSpec(kv, axes, cfg.dtype, "zeros")
     if s.cross and s.kind == "A":
         ckv = (batch, cfg.encoder_seq_len, cfg.n_kv_heads, cfg.head_dim)
         axes = ("batch", "", "kv_heads", "head_dim")

@@ -23,13 +23,14 @@ anyway count as hallucinations), exactly as the old serve driver did.
 """
 from __future__ import annotations
 
-from typing import List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.data.synthetic_squad import Question
 from repro.data.tokenizer import HashTokenizer
 from repro.generation.prompts import REFUSAL_TEXT, build_prompt
 from repro.retrieval.bm25 import BM25Index
 from repro.retrieval.hybrid import Retriever, resolve_retrievers
+from repro.routing.backends import StreamCompletion
 from repro.routing.registry import Action
 from repro.serving.engine import Engine
 from repro.serving.pipeline import ActionOutcome
@@ -210,3 +211,57 @@ class ContinuousEngineBackend(EngineBackend):
                       action: Action) -> List[ActionOutcome]:
         # single-bucket fallback routes through the same shared stream
         return self.execute_mixed(questions, [action] * len(questions))
+
+    # -- streaming protocol (AsyncGateway) -----------------------------
+
+    @property
+    def _stream_pending(self) -> Dict[int, tuple]:
+        # lazily created so the closed-loop construction paths (and
+        # pickling in subprocess probes) stay untouched
+        try:
+            return self._stream_pending_map
+        except AttributeError:
+            self._stream_pending_map: Dict[int, tuple] = {}
+            return self._stream_pending_map
+
+    @property
+    def stream_backlog(self) -> int:
+        """Requests submitted into the engine but not yet completed —
+        the queue-depth signal admission control sheds on."""
+        return len(self._stream_pending)
+
+    def stream_submit(self, question: Question, action: Action
+                      ) -> Tuple[Optional[int], Optional[ActionOutcome]]:
+        """Submit ONE routed request into the shared slot pool without
+        blocking.  Refusals complete immediately (``(None, outcome)``);
+        everything else returns ``(rid, None)`` and resolves through
+        :meth:`stream_poll`.  Over-length prompts reject per-request
+        inside the engine and surface at the next poll."""
+        if action.mode == "refuse":
+            return None, self._refusal_outcome(question, action)
+        toks, hit = self._prep(question, action)
+        rid = self.engine.reserve_rid()
+        self.engine.submit(rid, toks, self.max_new_tokens, strict=False)
+        self._stream_pending[rid] = (question, action, hit, len(toks))
+        return rid, None
+
+    def stream_poll(self) -> List[StreamCompletion]:
+        """One engine scheduling step (decode chunk / admissions /
+        harvest); returns completions since the last poll.  Non-
+        blocking with respect to the stream: in-flight requests keep
+        decoding across successive polls."""
+        done: List[StreamCompletion] = []
+        for rid, gen in self.engine.poll().items():
+            meta = self._stream_pending.pop(rid, None)
+            if meta is None:
+                continue     # a closed-loop rid (modes must not mix)
+            q, action, hit, plen = meta
+            if gen.failed:
+                out = self._rejected_outcome(q, action, gen.failed)
+            else:
+                out = self._generated_outcome(q, action, plen,
+                                              gen.n_steps, hit)
+            done.append(StreamCompletion(
+                rid=rid, outcome=out, admitted_at=gen.admitted_at,
+                finished_at=gen.finished_at))
+        return done

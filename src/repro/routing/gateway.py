@@ -36,7 +36,8 @@ from repro.routing.backends import GenerationBackend, as_backend
 from repro.routing.policy import RoutingContext, RoutingDecision, RoutingPolicy
 from repro.routing.registry import (ActionSpace, get_action_space,
                                     get_slo_profile)
-from repro.serving.slo_budget import DEFAULT_TARGETS, SLOBudgetTracker
+from repro.serving.slo_budget import (DEFAULT_TARGETS, LatencyReservoir,
+                                      SLOBudgetTracker)
 
 
 @dataclass
@@ -45,6 +46,11 @@ class Request:
     question: Question
     slo: str = "quality_first"
     arrival_ms: float = 0.0
+    # per-request completion-latency SLO (0 = none): stamped at arrival
+    # by the open-loop AsyncGateway, measured at first token and
+    # completion, and consulted by admission control (a request whose
+    # deadline already passed while queued is shed, not served)
+    deadline_ms: float = 0.0
 
 
 @dataclass
@@ -54,6 +60,15 @@ class GatewayStats:
     # apart from policy refusals so a misconfigured engine doesn't
     # masquerade as deliberate refusal behaviour
     rejected: int = 0
+    # SLO-actuated admission-control counters (AsyncGateway) — each
+    # actuation is tallied separately from policy refusals so the
+    # control loop's interventions are auditable:
+    #   shed            — rejected at the queue, never routed/served
+    #   forced_refusals — policy chose to answer, burn forced refuse
+    #   depth_clamped   — routed retrieval depth clamped shallower
+    shed: int = 0
+    forced_refusals: int = 0
+    depth_clamped: int = 0
     total_reward: float = 0.0
     # mirrors of the backend's shared retrieval LRU counters (0/0 when
     # the backend serves uncached) — repeated queries in a stream stop
@@ -65,10 +80,17 @@ class GatewayStats:
     # bounded ring of recent decisions (O(1) trim in long runs)
     decisions: Deque[RoutingDecision] = field(
         default_factory=lambda: deque(maxlen=256))
+    # bounded reservoir of per-request completion latencies — the one
+    # home for serving percentiles (p50/p95/p99), O(capacity) forever
+    latency: LatencyReservoir = field(default_factory=LatencyReservoir)
 
     @property
     def avg_reward(self) -> float:
         return self.total_reward / max(self.served, 1)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p95/p99 (+ mean/max) over the recorded latencies."""
+        return self.latency.percentiles()
 
 
 class Gateway:
@@ -135,6 +157,7 @@ class Gateway:
             answerable=out.answerable, latency_ms=lat_ms)
         self.budget.record(outcome)
         self.stats.served += 1
+        self.stats.latency.record(lat_ms)
         if getattr(out, "rejected", False):
             self.stats.rejected += 1
         self.stats.total_reward += rew

@@ -20,6 +20,15 @@ _LAZY = {
     "EngineStats": "repro.serving.continuous",
     "SingleDeviceExecutor": "repro.serving.executor",
     "ShardedExecutor": "repro.serving.executor",
+    "AsyncGateway": "repro.serving.streaming",
+    "StreamHandle": "repro.serving.streaming",
+    "AdmissionConfig": "repro.serving.streaming",
+    "LoadGenerator": "repro.serving.traffic",
+    "PoissonProcess": "repro.serving.traffic",
+    "OnOffProcess": "repro.serving.traffic",
+    "VirtualClock": "repro.serving.traffic",
+    "build_trace": "repro.serving.traffic",
+    "sweep_offered_load": "repro.serving.traffic",
 }
 
 __all__ = ["RAGPipeline", "ActionOutcome", *sorted(_LAZY)]

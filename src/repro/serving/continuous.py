@@ -68,7 +68,11 @@ class CompletedGeneration:
     tokens: np.ndarray        # (n,) generated tokens, incl. EOS if emitted
     n_steps: int              # == len(tokens)
     prompt_len: int
-    finished_at: float = 0.0  # host monotonic clock at harvest (latency)
+    finished_at: float = 0.0  # engine clock at harvest (latency)
+    # engine clock when the prefill was dispatched — the prefill emits
+    # the request's first token, so this is the time-to-first-token
+    # stamp open-loop serving reports against per-request deadlines
+    admitted_at: float = 0.0
     failed: str = ""          # non-empty: rejected at submit, never admitted
 
 
@@ -104,7 +108,7 @@ class ContinuousEngine:
                  sync_every: int = 4, prefill_pad_multiple: int = 1,
                  prefill_batch: int = 1, admission_lookahead: int = 16,
                  moe_fn=None, mla_absorb: bool = False,
-                 mesh=None, executor=None):
+                 mesh=None, executor=None, clock=None):
         if executor is None:
             if model is None:
                 raise ValueError("ContinuousEngine needs model+params or "
@@ -128,6 +132,11 @@ class ContinuousEngine:
         self.prefill_batch = executor.prefill_batch
         self.prefill_pad_multiple = max(1, prefill_pad_multiple)
         self.admission_lookahead = max(0, admission_lookahead)
+        # timestamp source for admitted_at / finished_at.  Injectable so
+        # the open-loop traffic harness can drive the engine on a
+        # virtual clock (deterministic latency accounting); default is
+        # the host monotonic clock.
+        self._clock = clock if clock is not None else time.perf_counter
         self.stats = EngineStats()
         self.stats.cache_allocations = executor.cache_allocations
 
@@ -143,6 +152,7 @@ class ContinuousEngine:
         self._free: Deque[int] = deque(range(S))
         self._queue: Deque[SlotRequest] = deque()
         self._results: Dict[int, CompletedGeneration] = {}
+        self._admitted_at: Dict[int, float] = {}
         self._auto_rid = 0
 
     # -- submission ----------------------------------------------------
@@ -182,9 +192,10 @@ class ContinuousEngine:
             if strict:
                 raise ValueError(reason)
             self.stats.n_rejected += 1
+            now = self._clock()
             self._results[rid] = CompletedGeneration(
                 rid=rid, tokens=np.zeros(0, np.int32), n_steps=0,
-                prompt_len=plen, finished_at=time.perf_counter(),
+                prompt_len=plen, finished_at=now, admitted_at=now,
                 failed=reason)
             return False
         self._queue.append(SlotRequest(rid, list(prompt), max_new))
@@ -236,10 +247,12 @@ class ContinuousEngine:
             limits[:len(group)] = [req.max_new_tokens for req in group]
             self.executor.admit(toks, slot_idx, limits)
             self.stats.n_prefills += 1
+            now = self._clock()
             for req, slot in zip(group, slots):
                 self.stats.n_admitted += 1
                 self._rid[slot] = req.rid
                 self._plen[slot] = plen
+                self._admitted_at[req.rid] = now
                 self._dirty.add(slot)
             n_live = sum(r is not None for r in self._rid)
             self.stats.concurrency_trace.append(n_live)
@@ -260,39 +273,75 @@ class ContinuousEngine:
             return
         # fetch the output buffer only when something actually finished
         out = self.executor.fetch_outputs()
-        now = time.perf_counter()
+        now = self._clock()
         for slot in done_slots:
             n = int(self._gen[slot])
-            self._results[self._rid[slot]] = CompletedGeneration(
-                rid=self._rid[slot], tokens=out[slot, :n].copy(),
+            rid = self._rid[slot]
+            self._results[rid] = CompletedGeneration(
+                rid=rid, tokens=out[slot, :n].copy(),
                 n_steps=n, prompt_len=int(self._plen[slot]),
-                finished_at=now)
+                finished_at=now,
+                admitted_at=self._admitted_at.pop(rid, now))
             self.stats.n_completed += 1
             self._rid[slot] = None
             self._free.append(slot)
 
     # -- driver --------------------------------------------------------
 
+    @property
+    def has_work(self) -> bool:
+        """Queued or slot-resident requests exist (rejected/finished
+        results awaiting a ``poll``/``run`` don't count as work)."""
+        return bool(self._queue) or any(r is not None for r in self._rid)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_resident(self) -> int:
+        return sum(r is not None for r in self._rid)
+
+    def step(self) -> None:
+        """ONE scheduling iteration: harvest, then either a decode
+        chunk (with the next admission groups' prefills overlapped) or,
+        with no resident work, just admissions.  This is ``run()``'s
+        loop body split out so an always-on serving thread can
+        interleave engine progress with new submissions instead of
+        draining to empty."""
+        self._harvest()
+        if self._active.any():
+            # decode chunk first (async), then overlap the next
+            # admission groups' prefills with it; block only at the
+            # control sync
+            self.executor.decode_chunk()
+            self.stats.n_decode_chunks += 1
+            self.stats.n_decode_steps += self.sync_every
+            self._start_admissions()
+            self._sync()
+            self._harvest()
+        else:
+            self._start_admissions()
+            if self._dirty:
+                self._sync()
+                self._harvest()
+
+    def poll(self) -> Dict[int, CompletedGeneration]:
+        """Advance the engine by one ``step`` (when it has work) and
+        return every request completed since the last ``poll``/``run``
+        — including submit-time rejections.  Never blocks waiting for
+        the stream to drain: the open-loop serving thread calls this
+        between submission bursts."""
+        if self.has_work:
+            self.step()
+        done, self._results = self._results, {}
+        return done
+
     def run(self) -> Dict[int, CompletedGeneration]:
         """Drain the queue; returns {rid: CompletedGeneration} for every
         request completed since the last call."""
-        while self._queue or any(r is not None for r in self._rid):
-            self._harvest()
-            if self._active.any():
-                # decode chunk first (async), then overlap the next
-                # admission groups' prefills with it; block only at the
-                # control sync
-                self.executor.decode_chunk()
-                self.stats.n_decode_chunks += 1
-                self.stats.n_decode_steps += self.sync_every
-                self._start_admissions()
-                self._sync()
-                self._harvest()
-            else:
-                self._start_admissions()
-                if self._dirty:
-                    self._sync()
-                    self._harvest()
+        while self.has_work:
+            self.step()
         done, self._results = self._results, {}
         return done
 

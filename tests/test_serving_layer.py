@@ -33,8 +33,8 @@ def test_budget_burn_and_health():
     for _ in range(20):  # wrong refusals burn the budget
         tr.record(_outcome(refused=True, answerable=True, correct=False))
     rep = tr.report()["refusal"]
-    assert not rep["healthy"]
-    assert rep["budget_consumed"] > 1.0
+    assert not rep.healthy
+    assert rep.budget_consumed > 1.0
 
 
 def test_budget_backpressure_tightens_cap():

@@ -1,0 +1,223 @@
+"""Focused tests for the SLO error-budget tracker: window eviction,
+budget edge cases, burn-rate actuation thresholds, refusal-cap
+monotonicity, and the latency reservoir."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.serving_types import RequestOutcome
+from repro.serving.slo_budget import (BudgetReport, LatencyReservoir,
+                                      SLOBudgetTracker, SLOTarget,
+                                      latency_target)
+
+
+def _outcome(qid=0, *, refused=False, answerable=True, hallucinated=False,
+             correct=True, cost=10.0, latency_ms=5.0):
+    return RequestOutcome(qid=qid, action=0, correct=correct,
+                          refused=refused, hallucinated=hallucinated,
+                          cost_tokens=cost, answerable=answerable,
+                          latency_ms=latency_ms)
+
+
+def _tracker(*, window=4, objective=0.5, metric="refusal", threshold=0.0,
+             **kw):
+    return SLOBudgetTracker(
+        [SLOTarget("t", metric, threshold, objective=objective,
+                   window=window)], **kw)
+
+
+# --- window eviction --------------------------------------------------------
+
+
+def test_window_evicts_oldest_events():
+    tr = _tracker(window=4)
+    # 4 violations fill the window...
+    for i in range(4):
+        tr.record(_outcome(i, refused=True, answerable=True))
+    assert tr.states["t"].violation_rate == 1.0
+    # ...then 4 clean events evict them completely
+    for i in range(4):
+        tr.record(_outcome(i, refused=False))
+    s = tr.states["t"]
+    assert len(s.events) == 4
+    assert s.violation_rate == 0.0
+    assert s.healthy
+
+
+def test_window_never_exceeds_target_window():
+    tr = _tracker(window=3)
+    for i in range(50):
+        tr.record(_outcome(i, refused=bool(i % 2), answerable=True))
+    assert len(tr.states["t"].events) == 3
+
+
+# --- budget_consumed edge cases ---------------------------------------------
+
+
+def test_budget_consumed_empty_window_is_zero():
+    tr = _tracker()
+    s = tr.states["t"]
+    assert s.violation_rate == 0.0
+    assert s.budget_consumed == 0.0
+    assert s.burn_rate() == 0.0
+    assert s.healthy
+
+
+def test_budget_consumed_zero_error_budget_is_inf():
+    # objective=1.0 -> error budget 0: any violation is infinite burn
+    tr = _tracker(objective=1.0)
+    tr.record(_outcome(refused=True, answerable=True))
+    s = tr.states["t"]
+    assert math.isinf(s.budget_consumed)
+    assert math.isinf(s.burn_rate())
+    assert not s.healthy
+
+
+def test_budget_consumed_exactly_at_budget_is_healthy():
+    # objective 0.5 => budget 0.5; 2/4 violations = exactly consumed
+    tr = _tracker(window=4, objective=0.5)
+    for i in range(4):
+        tr.record(_outcome(i, refused=(i < 2), answerable=True))
+    s = tr.states["t"]
+    assert s.budget_consumed == pytest.approx(1.0)
+    assert s.healthy          # <=1.0 is healthy; breach means >1.0
+
+
+def test_latency_metric_counts_over_threshold():
+    tr = SLOBudgetTracker([latency_target(100.0, objective=0.5, window=10)])
+    tr.record(_outcome(latency_ms=50.0))
+    tr.record(_outcome(latency_ms=150.0))
+    assert tr.states["latency"].violation_rate == pytest.approx(0.5)
+
+
+# --- burn rate: the actuation signal ----------------------------------------
+
+
+def test_burn_rate_sees_recent_violations_before_full_window():
+    """A 500-event window dilutes a violation storm; the short-window
+    burn rate is the fast signal that reacts first."""
+    tr = _tracker(window=500, objective=0.9, burn_window=10)
+    for i in range(200):
+        tr.record(_outcome(i, refused=False))
+    # now a storm: 10 straight violations
+    for i in range(10):
+        tr.record(_outcome(i, refused=True, answerable=True))
+    s = tr.states["t"]
+    # long-window: 10/210 ~ 4.8% of a 10% budget -> under half consumed
+    assert s.budget_consumed < 0.5
+    # short-window: 10/10 violations against a 10% budget -> 10x burn
+    assert s.burn_rate(10) == pytest.approx(10.0)
+    assert tr.burn_rate("t") == pytest.approx(10.0)
+
+
+def test_burn_rate_unknown_target_is_zero():
+    tr = _tracker()
+    assert tr.burn_rate("nonexistent") == 0.0
+
+
+def test_burn_rate_window_zero_is_zero():
+    tr = _tracker()
+    tr.record(_outcome(refused=True, answerable=True))
+    assert tr.states["t"].burn_rate(0) == 0.0
+
+
+# --- typed report -----------------------------------------------------------
+
+
+def test_report_returns_typed_rows():
+    tr = _tracker(window=4, objective=0.5)
+    tr.record(_outcome(refused=True, answerable=True))
+    rep = tr.report()["t"]
+    assert isinstance(rep, BudgetReport)
+    assert rep.violation_rate == 1.0
+    assert rep.window_n == 1
+    assert isinstance(rep.healthy, bool)
+    d = tr.report_dict()["t"]
+    assert set(d) == {"violation_rate", "budget_consumed", "burn_rate",
+                      "window_n", "healthy"}
+    assert isinstance(d["healthy"], bool)       # bools stay bools, typed
+
+
+# --- refusal cap adjustment -------------------------------------------------
+
+
+def _refusal_tracker(violation_rate, *, n=100, objective=0.9, **kw):
+    tr = SLOBudgetTracker([SLOTarget("refusal", "refusal", 0.0,
+                                     objective=objective, window=n)], **kw)
+    n_bad = int(round(violation_rate * n))
+    for i in range(n):
+        tr.record(_outcome(i, refused=(i < n_bad), answerable=True))
+    return tr
+
+
+def test_refusal_cap_untouched_below_knee():
+    # burn 0.4 <= knee 0.5: no adjustment
+    tr = _refusal_tracker(0.04)       # 4% of a 10% budget = 0.4 burn
+    assert tr.refusal_cap_adjustment(0.6) == pytest.approx(0.6)
+
+
+def test_refusal_cap_monotone_nonincreasing_in_burn():
+    caps = [_refusal_tracker(v).refusal_cap_adjustment(0.6)
+            for v in (0.0, 0.05, 0.10, 0.15, 0.20, 0.30, 0.50)]
+    assert all(a >= b - 1e-12 for a, b in zip(caps, caps[1:]))
+    assert caps[0] > caps[-1]         # actually tightens somewhere
+
+
+def test_refusal_cap_floor_and_clip():
+    # 100% violations: burn clips at 2.0 -> scale 1 - 0.5*1.5 = 0.25
+    tr = _refusal_tracker(1.0)
+    assert tr.refusal_cap_adjustment(0.6) == pytest.approx(0.15)
+    # a tiny base cap can't go below the floor
+    assert tr.refusal_cap_adjustment(0.08) == pytest.approx(0.05)
+
+
+def test_refusal_cap_constants_configurable():
+    tr = _refusal_tracker(1.0, refusal_cap_floor=0.2, burn_slope=1.0,
+                          burn_knee=0.0, burn_clip=1.0)
+    # scale = 1 - 1.0 * (1.0 - 0.0) = 0 -> floored at 0.2
+    assert tr.refusal_cap_adjustment(0.6) == pytest.approx(0.2)
+
+
+def test_refusal_cap_no_events_passthrough():
+    tr = _tracker(metric="refusal")
+    tr.states["refusal"] = tr.states.pop("t")
+    assert tr.refusal_cap_adjustment(0.42) == 0.42
+
+
+# --- latency reservoir ------------------------------------------------------
+
+
+def test_reservoir_exact_below_capacity():
+    r = LatencyReservoir(capacity=100)
+    vals = list(range(1, 51))
+    r.extend(vals)
+    assert len(r) == 50 and r.count == 50
+    assert r.percentile(50) == pytest.approx(np.percentile(vals, 50))
+    p = r.percentiles()
+    assert p["n"] == 50
+    assert p["p99_ms"] <= p["max_ms"] == 50.0
+
+
+def test_reservoir_bounded_and_representative_over_capacity():
+    r = LatencyReservoir(capacity=256, seed=0)
+    rng = np.random.default_rng(1)
+    vals = rng.exponential(10.0, size=20_000)
+    r.extend(vals)
+    assert len(r) == 256 and r.count == 20_000
+    # sampled p50 within a loose band of the true p50
+    true = float(np.percentile(vals, 50))
+    assert abs(r.percentile(50) - true) < 0.35 * true
+
+
+def test_reservoir_deterministic():
+    a, b = LatencyReservoir(capacity=64), LatencyReservoir(capacity=64)
+    vals = np.linspace(0, 100, 1000)
+    a.extend(vals)
+    b.extend(vals)
+    assert a.percentiles() == b.percentiles()
+
+
+def test_reservoir_empty_percentiles_are_nan():
+    p = LatencyReservoir().percentiles()
+    assert p["n"] == 0 and math.isnan(p["p50_ms"])

@@ -1,0 +1,320 @@
+"""Open-loop streaming: arrival processes, the virtual-time load
+harness, AsyncGateway admission control, and the background serving
+thread.  Most tests run the deterministic SimulatorBackend service
+model; the continuous-engine end-to-end is marked slow+loadtest."""
+import numpy as np
+import pytest
+
+from repro.core.config import RouterConfig, TestbedConfig
+from repro.core.offline_log import build_testbed
+from repro.routing import FixedPolicy, Request, SimulatorBackend
+from repro.serving.streaming import (AdmissionConfig, AsyncGateway,
+                                     StreamHandle)
+from repro.serving.traffic import (Arrival, LoadGenerator, OnOffProcess,
+                                   PoissonProcess, VirtualClock, build_trace,
+                                   sweep_offered_load)
+
+ZERO_STATE = lambda qs: np.zeros((len(qs), 1))
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    cfg = TestbedConfig(n_train=40, n_eval=16, n_paragraphs=60,
+                        router=RouterConfig(n_epochs=1))
+    return cfg, build_testbed(cfg)
+
+
+def _gateway(pipe, clock, *, action=2, deadline_ms=200.0, admission=None,
+             **kw):
+    be = SimulatorBackend(pipe, stream_slots=4, service_polls=2,
+                          clock=clock.now)
+    return AsyncGateway(FixedPolicy(action), be, state_fn=ZERO_STATE,
+                        clock=clock.now, deadline_ms=deadline_ms,
+                        admission=admission or AdmissionConfig(), **kw)
+
+
+# --- arrival processes ------------------------------------------------------
+
+
+def test_poisson_seeded_and_mean_rate():
+    gaps = PoissonProcess(100.0, seed=7).inter_arrivals()
+    a = [next(gaps) for _ in range(5000)]
+    gaps2 = PoissonProcess(100.0, seed=7).inter_arrivals()
+    b = [next(gaps2) for _ in range(5000)]
+    assert a == b                                     # seeded
+    assert np.mean(a) == pytest.approx(1 / 100.0, rel=0.1)
+    assert PoissonProcess(50.0, seed=1).inter_arrivals() is not None
+    with pytest.raises(ValueError):
+        PoissonProcess(0.0)
+
+
+def test_onoff_bursty_but_same_mean():
+    p = OnOffProcess(200.0, on_s=0.5, off_s=0.5, seed=3)
+    assert p.mean_rate == pytest.approx(100.0)
+    gaps = [next(iter_g) for iter_g in [p.inter_arrivals()] for _ in range(8000)]
+    # mean offered rate near the analytic mean...
+    assert 1 / np.mean(gaps) == pytest.approx(100.0, rel=0.25)
+    # ...but far burstier than Poisson at the same mean (CV >> 1)
+    cv = np.std(gaps) / np.mean(gaps)
+    assert cv > 1.3
+
+
+def test_build_trace_monotone_and_cycling(testbed):
+    _, (data, *_rest) = testbed
+    qs = data.questions[:3]
+    trace = build_trace(qs, PoissonProcess(10.0, seed=0), 7,
+                        deadline_ms=123.0, slo="cheap")
+    assert len(trace) == 7
+    ts = [a.t for a in trace]
+    assert ts == sorted(ts) and ts[0] > 0
+    assert [a.request.qid for a in trace] == list(range(7))
+    assert trace[3].request.question is qs[0]         # cycles
+    assert all(a.request.deadline_ms == 123.0 for a in trace)
+    assert all(a.request.slo == "cheap" for a in trace)
+
+
+def test_virtual_clock():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    c.advance(1.5)
+    c.advance_to(1.0)                                 # no-op backwards
+    assert c.now() == 1.5
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+# --- AsyncGateway: open-loop serving ----------------------------------------
+
+
+def test_open_loop_serves_trace_and_stamps_latency(testbed):
+    _, (data, index, pipe, *_rest) = testbed
+    clock = VirtualClock()
+    gw = _gateway(pipe, clock)
+    trace = build_trace(data.questions[:8], PoissonProcess(40.0, seed=0),
+                        40, deadline_ms=500.0)
+    rep = LoadGenerator(gw, trace).run_virtual(clock,
+                                               service_quantum_s=0.01)
+    assert rep.offered == 40 and rep.completed == 40
+    assert rep.shed == 0
+    assert rep.answered + rep.refused == 40
+    # queueing + 2 service polls of 10ms quantum => real latencies
+    p = rep.latency.percentiles()
+    assert p["n"] > 0 and p["p50_ms"] >= 0.0
+    assert gw.stats.served == 40                      # all accounted
+    assert gw.stats.latency_percentiles()["n"] == 40
+    assert gw.in_flight == 0
+
+
+def test_open_loop_deterministic_same_seed(testbed):
+    """The acceptance criterion: same seed => same completions, sheds,
+    and latencies, bit for bit."""
+    _, (data, index, pipe, *_rest) = testbed
+
+    def run():
+        clock = VirtualClock()
+        gw = _gateway(pipe, clock, admission=AdmissionConfig(max_backlog=6))
+        trace = build_trace(data.questions[:8],
+                            PoissonProcess(300.0, seed=11), 60,
+                            deadline_ms=100.0)
+        rep = LoadGenerator(gw, trace).run_virtual(clock)
+        return rep.as_dict(), gw.stats.shed, gw.stats.forced_refusals
+
+    assert run() == run()
+
+
+def test_backlog_shedding_engages_under_overload(testbed):
+    """Over-offered load with a tiny backlog cap: admission sheds at
+    the queue, typed apart from policy refusals, and the system still
+    completes everything it admitted."""
+    _, (data, index, pipe, *_rest) = testbed
+    clock = VirtualClock()
+    gw = _gateway(pipe, clock,
+                  admission=AdmissionConfig(max_backlog=4))
+    # 500 req/s into a ~4-slot service: queue must overflow
+    trace = build_trace(data.questions[:8], PoissonProcess(500.0, seed=0),
+                        80, deadline_ms=1000.0)
+    rep = LoadGenerator(gw, trace).run_virtual(clock)
+    assert rep.shed > 0
+    assert gw.stats.shed == rep.shed
+    assert rep.completed == rep.offered               # sheds complete too
+    # shed handles carry the typed marker, not a policy refusal count
+    assert rep.shed + rep.answered + rep.refused == rep.offered
+
+
+def test_expired_deadline_shed_at_queue(testbed):
+    _, (data, index, pipe, *_rest) = testbed
+    clock = VirtualClock()
+    gw = _gateway(pipe, clock, deadline_ms=5.0,
+                  admission=AdmissionConfig(max_backlog=1000))
+    h = gw.submit_stream(Request(qid=0, question=data.questions[0]))
+    clock.advance(1.0)       # 1000ms in the queue >> 5ms deadline
+    gw.pump()
+    assert h.done() and h.shed
+    assert gw.stats.shed == 1
+    assert not h.deadline_met
+
+
+def test_latency_burn_shed_and_forced_refusals(testbed):
+    """Burn-rate actuation: sustained deadline violations push the
+    latency budget's short-window burn over the thresholds, and the
+    gateway starts refusing/shedding instead of queueing deeper."""
+    _, (data, index, pipe, *_rest) = testbed
+    clock = VirtualClock()
+    adm = AdmissionConfig(max_backlog=10_000, min_events=8,
+                          shed_burn=3.0, force_refuse_burn=2.0,
+                          burn_window=16, shed_expired=False)
+    # 10ms deadline, 2 polls x 10ms quantum service => every completion
+    # violates; the latency budget must burn hot
+    gw = _gateway(pipe, clock, deadline_ms=10.0, admission=adm)
+    trace = build_trace(data.questions[:8], PoissonProcess(200.0, seed=0),
+                        60, deadline_ms=10.0)
+    rep = LoadGenerator(gw, trace).run_virtual(clock,
+                                               service_quantum_s=0.01)
+    assert gw.budget.burn_rate("latency") > 1.0
+    assert gw.stats.forced_refusals > 0 or gw.stats.shed > 0
+    assert rep.forced_refusals == gw.stats.forced_refusals
+
+
+def test_depth_clamp_on_cost_burn(testbed):
+    """Cost-budget burn clamps routed retrieval depth to the shallowest
+    same-mode action instead of refusing: requests still get answered,
+    the depth actuation is counted."""
+    _, (data, index, pipe, *_rest) = testbed
+    clock = VirtualClock()
+    # cost target with a tiny threshold: every request violates it
+    from repro.serving.slo_budget import SLOTarget
+    targets = [SLOTarget("cost", "cost_tokens", 1.0, objective=0.95)]
+    adm = AdmissionConfig(max_backlog=10_000, min_events=4,
+                          clamp_burn=1.0, force_refuse_burn=1e9,
+                          shed_burn=1e9)
+    gw = _gateway(pipe, clock, deadline_ms=0.0, admission=adm,
+                  budget_targets=targets, action=2)   # k=10 guarded
+    trace = build_trace(data.questions[:8], PoissonProcess(40.0, seed=0),
+                        30)
+    LoadGenerator(gw, trace).run_virtual(clock)
+    assert gw.stats.depth_clamped > 0
+    assert gw.stats.forced_refusals == 0
+    # clamped requests were served with the shallowest guarded action
+    space = gw.space
+    shallow = min((a for a in space if a.mode == "guarded" and a.k > 0),
+                  key=lambda a: a.k)
+    assert gw.stats.action_counts[shallow.idx] > 0
+
+
+def test_closed_loop_paths_untouched(testbed):
+    """AsyncGateway still serves the classic closed-loop way (serve/
+    drain), identically to the base Gateway — the streaming layer is
+    additive."""
+    from repro.routing import Gateway
+    _, (data, index, pipe, *_rest) = testbed
+    reqs = [Request(qid=q.qid, question=q) for q in data.questions[:12]]
+    base = Gateway(FixedPolicy(1), SimulatorBackend(pipe),
+                   state_fn=ZERO_STATE).serve(list(reqs))
+    clock = VirtualClock()
+    stream = _gateway(pipe, clock, action=1).serve(list(reqs))
+    assert base.served == stream.served == 12
+    assert dict(base.action_counts) == dict(stream.action_counts)
+    assert base.total_reward == pytest.approx(stream.total_reward)
+
+
+def test_async_gateway_rejects_nonstreaming_backend(testbed):
+    _, (data, index, pipe, *_rest) = testbed
+
+    class NoStream:
+        def execute_batch(self, qs, a):
+            return []
+
+    with pytest.raises(TypeError):
+        AsyncGateway(FixedPolicy(0), NoStream(), state_fn=ZERO_STATE)
+
+
+def test_stream_handle_result_timeout(testbed):
+    _, (data, index, pipe, *_rest) = testbed
+    clock = VirtualClock()
+    gw = _gateway(pipe, clock)
+    h = gw.submit_stream(Request(qid=0, question=data.questions[0]))
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.01)
+    gw.drain_stream()
+    assert h.done() and h.result() is not None
+
+
+def test_background_thread_smoke(testbed):
+    """Realtime mode: the daemon serving thread completes futures while
+    the client thread just submits and waits."""
+    _, (data, index, pipe, *_rest) = testbed
+    be = SimulatorBackend(pipe, stream_slots=4, service_polls=2)
+    gw = AsyncGateway(FixedPolicy(2), be, state_fn=ZERO_STATE,
+                      deadline_ms=10_000.0)
+    with gw:
+        handles = [gw.submit_stream(Request(qid=i, question=q))
+                   for i, q in enumerate(data.questions[:10])]
+        outs = [h.result(timeout=30.0) for h in handles]
+    assert len(outs) == 10 and all(o is not None for o in outs)
+    assert gw.stats.served + gw.stats.shed == 10
+
+
+# --- offered-load sweep -----------------------------------------------------
+
+
+def test_sweep_offered_load_rows(testbed):
+    _, (data, index, pipe, *_rest) = testbed
+
+    def make(clock):
+        return _gateway(pipe, clock,
+                        admission=AdmissionConfig(max_backlog=6))
+
+    rows = sweep_offered_load(make, data.questions[:8], [20.0, 800.0],
+                              n_requests=60, deadline_ms=200.0, seed=0)
+    assert [r["rate"] for r in rows] == [20.0, 800.0]
+    for r in rows:
+        assert r["offered"] == 60
+        assert {"goodput", "shed", "latency_p50_ms",
+                "latency_p99_ms"} <= set(r)
+    # over-offered load sheds; comfortable load doesn't
+    assert rows[1]["shed"] > rows[0]["shed"]
+
+
+# --- continuous engine end-to-end (slow) ------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.loadtest
+def test_open_loop_continuous_engine_end_to_end(testbed):
+    """The real thing: a seeded Poisson trace through AsyncGateway over
+    the continuous engine in virtual time — deterministic completions,
+    every request accounted, engine stream serves across pumps."""
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.data.tokenizer import HashTokenizer
+    from repro.models import build_model
+    from repro.routing import ContinuousEngineBackend
+
+    _, (data, index, pipe, *_rest) = testbed
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run():
+        clock = VirtualClock()
+        backend = ContinuousEngineBackend.create(
+            model, params, HashTokenizer(mcfg.vocab_size), index,
+            num_slots=4, max_prompt_len=96, max_new_tokens=4,
+            clock=clock.now)
+        gw = AsyncGateway(FixedPolicy(0), backend, state_fn=ZERO_STATE,
+                          clock=clock.now, deadline_ms=5000.0,
+                          admission=AdmissionConfig(max_backlog=12))
+        trace = build_trace(data.questions[:6], PoissonProcess(100.0, seed=2),
+                            16, deadline_ms=5000.0)
+        rep = LoadGenerator(gw, trace).run_virtual(clock,
+                                                   service_quantum_s=0.005)
+        return rep, gw
+
+    rep, gw = run()
+    assert rep.completed == rep.offered == 16
+    assert gw.stats.served + gw.stats.shed == 16
+    assert gw.engine_stats.n_completed > 0
+    rep2, _ = run()
+    assert rep.as_dict() == rep2.as_dict()
