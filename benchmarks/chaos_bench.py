@@ -1,0 +1,204 @@
+"""Goodput under faults: open-loop traffic with seeded chaos plans.
+
+The fault-tolerance claim is quantitative: under injected retriever
+brownouts, executor fault bursts, and NaN storms, the serving plane
+must keep delivering goodput — degrading to the fallback retriever,
+retrying transients inside deadlines, and quarantining poisoned slots —
+and every offered request must still resolve (no hangs).  This bench
+measures that, deterministically: each scenario is a seeded
+:class:`~repro.serving.faults.FaultPlan` driven through the REAL
+continuous engine in virtual time (same seed, same rows — CI asserts
+on the artifact).
+
+Scenarios:
+
+* ``no_faults``      — the parity baseline: all fault machinery armed
+  but no plan; degraded / retries / faulted must all be ZERO.
+* ``retriever_brownout`` — the ``dense`` retriever raises for a window
+  of lookups: the circuit breaker trips, dense actions degrade to the
+  bm25 fallback, and after the window the half-open probe re-closes
+  the breaker (recovery time = last injected fault -> first healthy
+  non-degraded answer).
+* ``executor_fault_burst`` — decode chunks raise transiently: resident
+  requests abort, the gateway retries them inside their deadlines.
+* ``nan_storm`` — decode poisons slots with NaN flags: the scheduler
+  quarantines them (peers keep decoding) and serves on from the
+  surviving slot pool.
+
+Writes ``benchmarks/artifacts/BENCH_chaos.json`` AND repo-root
+``BENCH_chaos.json``.
+
+    PYTHONPATH=src:. python benchmarks/chaos_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.configs import get_config
+from repro.core.config import RetrievalConfig
+from repro.data.synthetic_squad import SyntheticSquad
+from repro.data.tokenizer import HashTokenizer
+from repro.models import build_model
+from repro.retrieval.bm25 import BM25Index
+from repro.retrieval.hybrid import IndexRetriever
+from repro.routing import FixedPolicy
+from repro.routing.engine_backend import ContinuousEngineBackend
+from repro.routing.registry import Action, ActionSpace
+from repro.serving.faults import ChaosInjector, FaultPlan, FaultSpec, \
+    RetryPolicy
+from repro.serving.streaming import AdmissionConfig, AsyncGateway
+from repro.serving.traffic import LoadGenerator, PoissonProcess, \
+    VirtualClock, build_trace
+
+NUM_SLOTS = 4
+MAX_PROMPT = 48
+MAX_NEW = 8
+SYNC_EVERY = 4
+RATE = 120.0               # offered req/s of virtual time (comfortable)
+DEADLINE_MS = 800.0        # roomy: faults, not overload, drive misses
+QUANTUM_S = 0.01           # virtual seconds charged per gateway pump
+
+# every non-refuse action reads through the "dense" retriever so the
+# brownout scenario actually exercises the fallback rewrite (here
+# "dense" is a second name over the same BM25 corpus — the fault
+# seam and breaker don't care what's underneath)
+CHAOS_SPACE = ActionSpace("chaos4", (
+    Action(0, 0, "refuse"),
+    Action(1, 1, "guarded", "dense"),
+    Action(2, 3, "guarded", "dense"),
+    Action(3, 5, "auto", "dense"),
+))
+
+
+def scenario_plans(n_requests: int):
+    """name -> FaultPlan.  Windows are in site-invocation counts, so
+    they scale with the trace length."""
+    # short enough that the breaker's half-open probes exhaust the
+    # fault window and re-close within the trace (recovery measurable)
+    brown = max(4, n_requests // 6)
+    return {
+        "no_faults": FaultPlan(),
+        "retriever_brownout": FaultPlan(specs=(
+            # every dense lookup in [4, 4+brown) raises; bm25 stays up
+            FaultSpec(site="retriever.dense", kind="raise",
+                      start=4, count=brown),
+        ), seed=0),
+        "executor_fault_burst": FaultPlan(specs=(
+            FaultSpec(site="executor.decode", kind="raise",
+                      start=6, count=3),
+        ), seed=0),
+        "nan_storm": FaultPlan(specs=(
+            FaultSpec(site="executor.decode", kind="nan",
+                      start=5, count=2, slots=(0, 1)),
+        ), seed=0),
+    }
+
+
+def run_scenario(model, mcfg, params, data, plan: FaultPlan,
+                 n_requests: int) -> dict:
+    """One seeded Poisson trace through AsyncGateway over the real
+    continuous engine, with ``plan`` armed, entirely in virtual time."""
+    clock = VirtualClock()
+    injector = ChaosInjector(plan, clock=clock.now, sleep=clock.advance)
+    index = BM25Index.build([p.text for p in data.paragraphs],
+                            RetrievalConfig(vocab_hash_dim=1024))
+    retrievers = {"bm25": IndexRetriever("bm25", index),
+                  "dense": IndexRetriever("dense", index)}
+    backend = ContinuousEngineBackend.create(
+        model, params, HashTokenizer(mcfg.vocab_size), index,
+        num_slots=NUM_SLOTS, max_prompt_len=MAX_PROMPT,
+        max_new_tokens=MAX_NEW, sync_every=SYNC_EVERY, clock=clock.now,
+        retrievers=retrievers, chaos=injector,
+        # small window/cooldown so trip + recovery both land inside
+        # one short trace
+        breaker_kw=dict(window=8, min_calls=4, failure_threshold=0.5,
+                        cooldown=4))
+    gw = AsyncGateway(
+        FixedPolicy(2), backend, action_space=CHAOS_SPACE,
+        state_fn=lambda qs: np.zeros((len(qs), 1)),
+        clock=clock.now, deadline_ms=DEADLINE_MS,
+        admission=AdmissionConfig(max_backlog=4 * NUM_SLOTS),
+        retry=RetryPolicy(max_retries=2, backoff_s=0.02))
+    trace = build_trace(data.questions, PoissonProcess(RATE, seed=0),
+                        n_requests, deadline_ms=DEADLINE_MS)
+    gen = LoadGenerator(gw, trace)
+    rep = gen.run_virtual(clock, service_quantum_s=QUANTUM_S)
+
+    # recovery: last injected fault -> first healthy (non-degraded,
+    # answered) completion after it
+    recovery_s = None
+    last_fire = injector.last_fire_t()
+    if last_fire is not None:
+        after = [h.completed_t for h in gen.last_handles
+                 if h.outcome is not None and not h.outcome.refused
+                 and not getattr(h.outcome, "degraded", False)
+                 and h.completed_t is not None
+                 and h.completed_t >= last_fire]
+        if after:
+            recovery_s = round(min(after) - last_fire, 4)
+    eng = backend.engine.stats
+    breakers = {name: {"state": b.state, "trips": b.n_trips,
+                       "denied": b.n_denied}
+                for name, b in backend.breakers.items()}
+    row = {
+        **rep.as_dict(),
+        "faults_fired": len(injector.fire_log),
+        "recovery_s": recovery_s,
+        "engine": {"n_quarantined": eng.n_quarantined,
+                   "n_nan_trips": eng.n_nan_trips,
+                   "n_watchdog_trips": eng.n_watchdog_trips,
+                   "n_exec_faults": eng.n_exec_faults,
+                   "n_timed_out": eng.n_timed_out},
+        "breakers": breakers,
+    }
+    # the hard liveness claim: EVERY offered request resolved
+    assert row["completed"] == row["offered"], (
+        f"unresolved requests: {row['completed']}/{row['offered']}")
+    return row
+
+
+def main(quick: bool = False) -> dict:
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_requests = 24 if quick else 48
+    data = SyntheticSquad(n_paragraphs=120, n_questions=24, seed=0)
+
+    out = {"n_requests": n_requests, "rate": RATE,
+           "deadline_ms": DEADLINE_MS, "num_slots": NUM_SLOTS,
+           "action_space": CHAOS_SPACE.name, "scenarios": {}}
+    for name, plan in scenario_plans(n_requests).items():
+        row = run_scenario(model, mcfg, params, data, plan, n_requests)
+        out["scenarios"][name] = row
+        print(f"{name:22s} goodput={row['goodput']:7.2f}/s "
+              f"degraded={row['degraded']:2d} retries={row['retries']:2d} "
+              f"timed_out={row['timed_out']:2d} faulted={row['faulted']:2d} "
+              f"quarantined={row['engine']['n_quarantined']}")
+
+    base = out["scenarios"]["no_faults"]
+    assert base["degraded"] == 0 and base["retries"] == 0 \
+        and base["faulted"] == 0, base
+    burst = out["scenarios"]["executor_fault_burst"]
+    assert burst["goodput"] > 0, burst
+    save_artifact("BENCH_chaos", out)
+    (Path(__file__).resolve().parents[1] / "BENCH_chaos.json").write_text(
+        json.dumps(out, indent=1))
+    return {"burst_goodput": burst["goodput"],
+            "brownout_degraded": out["scenarios"][
+                "retriever_brownout"]["degraded"]}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace (CI chaos-smoke)")
+    args = ap.parse_args()
+    print(main(quick=args.quick))

@@ -12,7 +12,7 @@ import json
 import sys
 import time
 
-from benchmarks import (conditioned_policy, fig1_action_dist,
+from benchmarks import (chaos_bench, conditioned_policy, fig1_action_dist,
                         fig2_cost_quality, fig3_reward, kernels_bench,
                         mitigation, objectives_ablation, ope, pareto_sweep,
                         perf_variants, retrieval_bench, roofline,
@@ -36,6 +36,8 @@ BENCHMARKS = {
     "retrieval": retrieval_bench.main,  # bm25 vs dense vs hybrid vs sharded
                                         # + hit@k + hybrid9 collapse check
                                         # (writes BENCH_retrieval.json)
+    "chaos": chaos_bench.main,          # goodput under injected faults
+                                        # (writes BENCH_chaos.json)
     "roofline": roofline.main,          # §Roofline table
     "perf": perf_variants.main,         # §Perf before/after from records
 }

@@ -15,10 +15,13 @@ from repro.retrieval.distributed import (DistributedBM25,
                                          distributed_bm25_topk,
                                          distributed_dense_topk,
                                          distributed_topk)
-from repro.retrieval.hybrid import (CachedRetriever, HybridRetriever,
-                                    IndexRetriever, RetrievalCache,
-                                    Retriever, build_retriever_suite,
-                                    resolve_retrievers)
+from repro.retrieval.hybrid import (BreakerRetriever, CachedRetriever,
+                                    CircuitBreaker, CircuitOpenError,
+                                    HybridRetriever, IndexRetriever,
+                                    RetrievalCache, Retriever,
+                                    build_retriever_suite, collect_breakers,
+                                    resolve_retrievers,
+                                    retrieve_with_fallback)
 
 __all__ = [
     "BM25Index", "DenseIndex", "embed_text",
@@ -26,5 +29,7 @@ __all__ = [
     "distributed_bm25_topk", "distributed_dense_topk",
     "Retriever", "IndexRetriever", "HybridRetriever",
     "RetrievalCache", "CachedRetriever",
+    "CircuitBreaker", "CircuitOpenError", "BreakerRetriever",
+    "collect_breakers", "retrieve_with_fallback",
     "build_retriever_suite", "resolve_retrievers",
 ]

@@ -16,15 +16,29 @@ same cost/quality lever as depth ("Cost-Aware Query Routing in RAG").
 * :class:`RetrievalCache` + :class:`CachedRetriever` — a bounded LRU
   keyed by (query, retriever, k) in front of any retriever; repeated
   queries in a serving stream stop re-scoring the whole corpus, and
-  hit counters surface in ``GatewayStats``.
+  hit counters surface in ``GatewayStats``;
+* :class:`CircuitBreaker` + :class:`BreakerRetriever` — per-retriever
+  closed → open → half-open breaker on a windowed failure rate, so a
+  browning-out retriever is cut off instead of hammered, and
+  :func:`retrieve_with_fallback` rewrites the lookup to a bm25
+  fallback as a *degraded* outcome the gateway accounts separately.
+
+Wrapping order (see :func:`resolve_retrievers`) is
+``CachedRetriever(BreakerRetriever(ChaosRetriever(raw)))``: cache hits
+bypass open breakers, failures propagate before ``cache.put`` so a
+failed lookup is never cached, and fallback results are produced by a
+*different* retriever so they land under the fallback's own cache key,
+never the original (query, retriever, k) key.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import (Dict, List, Mapping, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
 import numpy as np
+
+from repro.core.errors import CircuitOpenError, TransientFaultError
 
 
 @runtime_checkable
@@ -191,6 +205,182 @@ class CachedRetriever:
 
 
 # ---------------------------------------------------------------------------
+# Circuit breakers
+# ---------------------------------------------------------------------------
+
+
+class CircuitBreaker:
+    """Closed → open → half-open breaker on a windowed failure rate.
+
+    Fully deterministic and clock-free: the window is the last
+    ``window`` *calls* (a bounded deque, so old outcomes age out), and
+    the open-state cooldown is counted in *denied calls* rather than
+    wall time — the same call sequence always walks the same state
+    path, which is what the chaos tests replay.
+
+    * **closed** — calls flow; each outcome lands in the window.  When
+      the window holds ≥ ``min_calls`` outcomes and the failure rate
+      reaches ``failure_threshold``, the breaker trips open.
+    * **open** — ``allow()`` refuses the next ``cooldown - 1`` calls;
+      the ``cooldown``-th attempted call moves the breaker to half-open
+      and becomes its first probe.
+    * **half-open** — up to ``half_open_probes`` trial calls pass; one
+      success closes the breaker (window cleared — the service is
+      deemed recovered), one failure reopens it.
+    """
+
+    def __init__(self, *, window: int = 32, failure_threshold: float = 0.5,
+                 min_calls: int = 8, cooldown: int = 16,
+                 half_open_probes: int = 1):
+        assert window >= min_calls >= 1, (window, min_calls)
+        assert 0.0 < failure_threshold <= 1.0, failure_threshold
+        assert cooldown >= 1 and half_open_probes >= 1
+        self.window = window
+        self.failure_threshold = failure_threshold
+        self.min_calls = min_calls
+        self.cooldown = cooldown
+        self.half_open_probes = half_open_probes
+        self.state = "closed"
+        self._events: deque = deque(maxlen=window)   # True = failure
+        self._denied_since_open = 0
+        self._probes_out = 0
+        self.n_trips = 0
+        self.n_denied = 0
+
+    def failure_rate(self) -> float:
+        if not self._events:
+            return 0.0
+        return sum(self._events) / len(self._events)
+
+    def allow(self) -> bool:
+        """May a call proceed right now?  (Counts cooldown progress.)"""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            self._denied_since_open += 1
+            if self._denied_since_open >= self.cooldown:
+                self.state = "half_open"
+                self._probes_out = 0
+            else:
+                self.n_denied += 1
+                return False
+        # half-open: admit a bounded number of probes
+        if self._probes_out < self.half_open_probes:
+            self._probes_out += 1
+            return True
+        self.n_denied += 1
+        return False
+
+    def record_success(self) -> None:
+        if self.state == "half_open":
+            self.state = "closed"
+            self._events.clear()
+            self._probes_out = 0
+        elif self.state == "closed":
+            self._events.append(False)
+
+    def record_failure(self) -> None:
+        if self.state == "half_open":
+            self._trip()
+        elif self.state == "closed":
+            self._events.append(True)
+            if (len(self._events) >= self.min_calls
+                    and self.failure_rate() >= self.failure_threshold):
+                self._trip()
+
+    def _trip(self) -> None:
+        self.state = "open"
+        self.n_trips += 1
+        self._denied_since_open = 0
+        self._probes_out = 0
+
+    def reset(self) -> None:
+        self.state = "closed"
+        self._events.clear()
+        self._denied_since_open = 0
+        self._probes_out = 0
+
+
+class BreakerRetriever:
+    """Per-retriever breaker seam: refuses calls while the breaker is
+    open (:class:`~repro.core.errors.CircuitOpenError`) and records
+    success/failure of every call that does pass."""
+
+    def __init__(self, inner: Retriever,
+                 breaker: Optional[CircuitBreaker] = None):
+        self.inner = inner
+        self.name = inner.name
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+
+    def _call(self, fn, *args):
+        if not self.breaker.allow():
+            raise CircuitOpenError(self.name)
+        try:
+            out = fn(*args)
+        except Exception:
+            self.breaker.record_failure()
+            raise
+        self.breaker.record_success()
+        return out
+
+    def topk(self, query: str, k: int):
+        return self._call(self.inner.topk, query, k)
+
+    def passages(self, query: str, k: int) -> List[str]:
+        return self._call(self.inner.passages, query, k)
+
+
+def collect_breakers(retrievers: Mapping[str, Retriever]
+                     ) -> Dict[str, CircuitBreaker]:
+    """Find the breaker for each named retriever by unwrapping the
+    ``CachedRetriever(BreakerRetriever(...))`` chain (empty entries for
+    retrievers without one)."""
+    out: Dict[str, CircuitBreaker] = {}
+    for name, r in retrievers.items():
+        node = r
+        while node is not None:
+            brk = getattr(node, "breaker", None)
+            if isinstance(brk, CircuitBreaker):
+                out[name] = brk
+                break
+            node = getattr(node, "inner", None)
+    return out
+
+
+def retrieve_with_fallback(retrievers: Mapping[str, Retriever],
+                           name: str, query: str, k: int, *,
+                           fallback: str = "bm25"
+                           ) -> Tuple[List[str], bool]:
+    """Fetch passages from ``name``, degrading to ``fallback`` when the
+    primary fails (open breaker, injected fault, any exception).
+
+    Returns ``(passages, degraded)``.  The fallback lookup goes through
+    the fallback retriever's *own* wrapped entry, so its result is
+    cached (if at all) under the fallback's key — never the primary's.
+    If the primary *is* the fallback, or the fallback is missing or
+    also fails, the original failure is re-raised wrapped as a
+    :class:`~repro.core.errors.TransientFaultError` for the gateway's
+    retry path.
+    """
+    primary = retrievers[name]
+    try:
+        return primary.passages(query, k), False
+    except Exception as exc:
+        fb = retrievers.get(fallback)
+        if fb is None or name == fallback:
+            if isinstance(exc, TransientFaultError):
+                raise
+            raise TransientFaultError(
+                f"retriever {name!r} failed with no fallback: {exc}") from exc
+        try:
+            return fb.passages(query, k), True
+        except Exception as fb_exc:
+            raise TransientFaultError(
+                f"retriever {name!r} and fallback {fallback!r} both "
+                f"failed: {exc}; {fb_exc}") from fb_exc
+
+
+# ---------------------------------------------------------------------------
 # Construction helpers (shared by RAGPipeline and the engine backends)
 # ---------------------------------------------------------------------------
 
@@ -220,7 +410,10 @@ def build_retriever_suite(index, dense_index=None, *,
 
 
 def resolve_retrievers(retrievers: Optional[Mapping[str, Retriever]],
-                       index, *, cache_size: int = 0
+                       index, *, cache_size: int = 0,
+                       breakers: bool = True,
+                       breaker_kw: Optional[Dict] = None,
+                       chaos=None
                        ) -> Tuple[Dict[str, Retriever],
                                   Optional[RetrievalCache]]:
     """Normalize an executor's retriever config.
@@ -228,11 +421,24 @@ def resolve_retrievers(retrievers: Optional[Mapping[str, Retriever]],
     ``retrievers=None`` gives the bm25-only default over ``index`` (the
     seed behaviour, bit-for-bit); ``cache_size > 0`` wraps every
     retriever behind ONE shared bounded LRU and returns it so serving
-    stats can report hit rates.
+    stats can report hit rates.  ``breakers`` (default on — a closed
+    breaker is a pass-through, so healthy behaviour is unchanged) adds
+    a per-retriever :class:`CircuitBreaker` (``breaker_kw`` forwarded
+    to each); ``chaos`` (a :class:`~repro.serving.faults.ChaosInjector`)
+    installs fault seams innermost, so injected failures trip breakers
+    and never reach the cache.  Recover the breakers afterwards with
+    :func:`collect_breakers`.
     """
     if retrievers is None:
         retrievers = {"bm25": IndexRetriever("bm25", index)}
     retrievers = dict(retrievers)
+    if chaos is not None and getattr(chaos, "armed", False):
+        from repro.serving.faults import chaos_wrap_retrievers
+        retrievers = chaos_wrap_retrievers(retrievers, chaos)
+    if breakers:
+        retrievers = {
+            name: BreakerRetriever(r, CircuitBreaker(**(breaker_kw or {})))
+            for name, r in retrievers.items()}
     cache = None
     if cache_size > 0:
         cache = RetrievalCache(cache_size)

@@ -10,10 +10,17 @@ stays import-light.
 :class:`~repro.serving.streaming.AsyncGateway`): backends that can hold
 requests in flight additionally provide
 
-    stream_submit(question, action) -> (rid, immediate_outcome)
+    stream_submit(question, action, *, deadline_at=0.0)
+            -> (rid, immediate_outcome)
         enqueue ONE routed request without blocking.  Exactly one of
         the pair is non-None: immediate outcomes (refusals) never enter
-        the service stream.
+        the service stream.  ``deadline_at`` (backend-clock instant,
+        0 = none) lets deadline-enforcing backends cancel the request
+        mid-stream; the simulator accepts but ignores it (its service
+        model has no mid-service cancellation).  A transient fault at
+        submit raises :class:`~repro.core.errors.TransientFaultError`,
+        which the AsyncGateway turns into a bounded deadline-aware
+        retry.
     stream_poll() -> List[StreamCompletion]
         advance the backend by one scheduling step and return every
         request completed since the last poll.
@@ -109,8 +116,12 @@ class SimulatorBackend:
     def stream_backlog(self) -> int:
         return len(self._waiting) + len(self._in_service)
 
-    def stream_submit(self, question: Question, action: Action
+    def stream_submit(self, question: Question, action: Action, *,
+                      deadline_at: float = 0.0
                       ) -> Tuple[Optional[int], Optional[ActionOutcome]]:
+        # deadline_at accepted for protocol parity; the synthetic
+        # service model never cancels mid-service (the AsyncGateway's
+        # goodput accounting still marks late completions as misses)
         out = self.pipeline.execute(question, action)
         if action.mode == "refuse":
             return None, out          # refusals complete at the gate

@@ -29,7 +29,9 @@ from repro.data.synthetic_squad import Question
 from repro.data.tokenizer import HashTokenizer
 from repro.generation.prompts import REFUSAL_TEXT, build_prompt
 from repro.retrieval.bm25 import BM25Index
-from repro.retrieval.hybrid import Retriever, resolve_retrievers
+from repro.retrieval.hybrid import (Retriever, collect_breakers,
+                                    resolve_retrievers,
+                                    retrieve_with_fallback)
 from repro.routing.backends import StreamCompletion
 from repro.routing.registry import Action
 from repro.serving.engine import Engine
@@ -46,7 +48,8 @@ class EngineBackend:
                  index: BM25Index, *, max_prompt_len: int = 384,
                  max_new_tokens: int = 8,
                  retrievers: Optional[Mapping[str, Retriever]] = None,
-                 retrieval_cache_size: int = 0):
+                 retrieval_cache_size: int = 0, chaos=None,
+                 breaker_kw: Optional[dict] = None):
         self.engine = engine
         self.tok = tokenizer
         self.index = index
@@ -54,9 +57,13 @@ class EngineBackend:
         self.max_new_tokens = max_new_tokens
         # the same named-retriever protocol the simulator pipeline uses
         # (None = bm25-only over `index`, the seed behaviour); a shared
-        # bounded LRU fronts them when retrieval_cache_size > 0
+        # bounded LRU fronts them when retrieval_cache_size > 0, and a
+        # per-retriever circuit breaker sits under the cache (chaos
+        # seams, when armed, innermost)
         self.retrievers, self.retrieval_cache = resolve_retrievers(
-            retrievers, index, cache_size=retrieval_cache_size)
+            retrievers, index, cache_size=retrieval_cache_size,
+            chaos=chaos, breaker_kw=breaker_kw)
+        self.breakers = collect_breakers(self.retrievers)
 
     def _retrieve(self, question: str, k: int,
                   retriever: str = "bm25") -> List[str]:
@@ -70,16 +77,30 @@ class EngineBackend:
                 f"available: {sorted(self.retrievers)}") from None
         return r.passages(question, k)
 
-    def _prep(self, q: Question, action: Action) -> Tuple[List[int], bool]:
+    def _prep(self, q: Question, action: Action
+              ) -> Tuple[List[int], bool, bool]:
         """Retrieve with the action's retriever at its depth and build
         the prompt tokens.  Returns (token ids padded to
-        max_prompt_len, retrieval hit)."""
-        passages = self._retrieve(q.text, action.k, action.retriever)
+        max_prompt_len, retrieval hit, degraded).  ``degraded`` means
+        the action's retriever failed (open breaker / fault) and the
+        lookup was rewritten to the bm25 fallback; a transient fault
+        with no working fallback raises ``TransientFaultError`` for the
+        gateway's retry path."""
+        degraded = False
+        if action.k <= 0:
+            passages: List[str] = []
+        else:
+            if action.retriever not in self.retrievers:
+                raise KeyError(
+                    f"action retriever {action.retriever!r} not "
+                    f"configured; available: {sorted(self.retrievers)}")
+            passages, degraded = retrieve_with_fallback(
+                self.retrievers, action.retriever, q.text, action.k)
         hit = bool(q.gold_answer) and any(
             q.gold_answer in p for p in passages)
         prompt = build_prompt(action.mode, q.text, passages)
         return self.tok.encode(prompt, bos=True,
-                               max_len=self.max_prompt_len), hit
+                               max_len=self.max_prompt_len), hit, degraded
 
     @staticmethod
     def _refusal_outcome(q: Question, action: Action) -> ActionOutcome:
@@ -106,29 +127,64 @@ class EngineBackend:
             answer=f"<rejected: {reason}>", rejected=True)
 
     @staticmethod
+    def _transient_outcome(q: Question, action: Action,
+                           reason: str) -> ActionOutcome:
+        """A retryable fault (quarantined slot, executor fault, dead
+        retrieval path): refused for reward/budget purposes, but
+        ``transient=True`` lets the gateway retry it within the
+        request's deadline before accounting."""
+        return ActionOutcome(
+            qid=q.qid, action=action.idx, correct=False, refused=True,
+            hallucinated=False, cost_tokens=REFUSE_COST_TOKENS,
+            hit=False, answerable=q.answerable,
+            answer=f"<transient fault: {reason}>", transient=True)
+
+    @staticmethod
+    def _timeout_outcome(q: Question, action: Action) -> ActionOutcome:
+        """Cancelled mid-stream past its deadline — an SLO violation
+        (refused burns the budget), never retried."""
+        return ActionOutcome(
+            qid=q.qid, action=action.idx, correct=False, refused=True,
+            hallucinated=False, cost_tokens=REFUSE_COST_TOKENS,
+            hit=False, answerable=q.answerable,
+            answer="<deadline exceeded>", timed_out=True)
+
+    @classmethod
+    def _failed_outcome(cls, q: Question, action: Action,
+                        gen) -> ActionOutcome:
+        """Map a failed :class:`CompletedGeneration` to its outcome."""
+        if gen.timed_out:
+            return cls._timeout_outcome(q, action)
+        if gen.transient:
+            return cls._transient_outcome(q, action, gen.failed)
+        return cls._rejected_outcome(q, action, gen.failed)
+
+    @staticmethod
     def _generated_outcome(q: Question, action: Action, prompt_len: int,
-                           n_out: int, hit: bool) -> ActionOutcome:
+                           n_out: int, hit: bool,
+                           degraded: bool = False) -> ActionOutcome:
         return ActionOutcome(
             qid=q.qid, action=action.idx, correct=False, refused=False,
             hallucinated=not q.answerable,
             cost_tokens=float(prompt_len + n_out), hit=hit,
             answerable=q.answerable,
-            answer=f"<{n_out} generated tokens>")
+            answer=f"<{n_out} generated tokens>", degraded=degraded)
 
     def execute_batch(self, questions: Sequence[Question],
                       action: Action) -> List[ActionOutcome]:
         if action.mode == "refuse":
             return [self._refusal_outcome(q, action) for q in questions]
-        prompts, hits = [], []
+        prompts, hits, degr = [], [], []
         for q in questions:
-            toks, hit = self._prep(q, action)
+            toks, hit, degraded = self._prep(q, action)
             prompts.append(toks)
             hits.append(hit)
+            degr.append(degraded)
         result = self.engine.generate(prompts,
                                       max_new_tokens=self.max_new_tokens)
         n_out = result.tokens.shape[1]
         return [self._generated_outcome(q, action, len(prompts[i]), n_out,
-                                        hits[i])
+                                        hits[i], degr[i])
                 for i, q in enumerate(questions)]
 
 
@@ -154,7 +210,8 @@ class ContinuousEngineBackend(EngineBackend):
                max_new_tokens: int = 8, sync_every: int = 4,
                prefill_batch: Optional[int] = None,
                retrievers: Optional[Mapping[str, Retriever]] = None,
-               retrieval_cache_size: int = 0,
+               retrieval_cache_size: int = 0, chaos=None,
+               breaker_kw: Optional[dict] = None,
                **engine_kw) -> "ContinuousEngineBackend":
         """Build a :class:`~repro.serving.continuous.ContinuousEngine`
         sized for this backend's prompts and wrap it.
@@ -174,37 +231,46 @@ class ContinuousEngineBackend(EngineBackend):
             max_new_cap=max_new_tokens, sync_every=sync_every,
             prefill_batch=(num_slots if prefill_batch is None
                            else prefill_batch),
-            mesh=mesh, executor=executor, **engine_kw)
+            mesh=mesh, executor=executor, chaos=chaos, **engine_kw)
         return cls(engine, tokenizer, index, max_prompt_len=max_prompt_len,
                    max_new_tokens=max_new_tokens, retrievers=retrievers,
-                   retrieval_cache_size=retrieval_cache_size)
+                   retrieval_cache_size=retrieval_cache_size, chaos=chaos,
+                   breaker_kw=breaker_kw)
 
     def execute_mixed(self, questions: Sequence[Question],
                       actions: Sequence[Action]) -> List[ActionOutcome]:
+        from repro.core.errors import TransientFaultError
         outcomes: List[ActionOutcome] = [None] * len(questions)
-        submitted = {}   # rid -> (position, question, action, hit, plen)
+        submitted = {}   # rid -> (position, question, action, hit, plen,
+        #                          degraded)
         for i, (q, action) in enumerate(zip(questions, actions)):
             if action.mode == "refuse":
                 outcomes[i] = self._refusal_outcome(q, action)
                 continue
-            toks, hit = self._prep(q, action)
+            try:
+                toks, hit, degraded = self._prep(q, action)
+            except TransientFaultError as exc:
+                # dead retrieval path for THIS request only — the rest
+                # of the micro-batch still serves
+                outcomes[i] = self._transient_outcome(q, action, str(exc))
+                continue
             rid = self.engine.reserve_rid()
             # non-strict: an over-length prompt is rejected per-request
             # (failed CompletedGeneration) instead of raising and
             # killing the micro-batch with other slots still resident
             self.engine.submit(rid, toks, self.max_new_tokens,
                                strict=False)
-            submitted[rid] = (i, q, action, hit, len(toks))
+            submitted[rid] = (i, q, action, hit, len(toks), degraded)
         if submitted:
             done = self.engine.run()
-            for rid, (i, q, action, hit, plen) in submitted.items():
+            for rid, (i, q, action, hit, plen, degraded) in \
+                    submitted.items():
                 gen = done[rid]
                 if gen.failed:
-                    outcomes[i] = self._rejected_outcome(q, action,
-                                                         gen.failed)
+                    outcomes[i] = self._failed_outcome(q, action, gen)
                 else:
                     outcomes[i] = self._generated_outcome(
-                        q, action, plen, gen.n_steps, hit)
+                        q, action, plen, gen.n_steps, hit, degraded)
         return outcomes
 
     def execute_batch(self, questions: Sequence[Question],
@@ -230,19 +296,26 @@ class ContinuousEngineBackend(EngineBackend):
         the queue-depth signal admission control sheds on."""
         return len(self._stream_pending)
 
-    def stream_submit(self, question: Question, action: Action
+    def stream_submit(self, question: Question, action: Action, *,
+                      deadline_at: float = 0.0
                       ) -> Tuple[Optional[int], Optional[ActionOutcome]]:
         """Submit ONE routed request into the shared slot pool without
         blocking.  Refusals complete immediately (``(None, outcome)``);
         everything else returns ``(rid, None)`` and resolves through
         :meth:`stream_poll`.  Over-length prompts reject per-request
-        inside the engine and surface at the next poll."""
+        inside the engine and surface at the next poll.  A nonzero
+        ``deadline_at`` (engine-clock instant) is enforced mid-stream:
+        the engine cancels the request past it.  A dead retrieval path
+        raises ``TransientFaultError`` — the AsyncGateway catches it
+        and schedules a bounded retry."""
         if action.mode == "refuse":
             return None, self._refusal_outcome(question, action)
-        toks, hit = self._prep(question, action)
+        toks, hit, degraded = self._prep(question, action)
         rid = self.engine.reserve_rid()
-        self.engine.submit(rid, toks, self.max_new_tokens, strict=False)
-        self._stream_pending[rid] = (question, action, hit, len(toks))
+        self.engine.submit(rid, toks, self.max_new_tokens, strict=False,
+                           deadline_at=deadline_at)
+        self._stream_pending[rid] = (question, action, hit, len(toks),
+                                     degraded)
         return rid, None
 
     def stream_poll(self) -> List[StreamCompletion]:
@@ -255,12 +328,12 @@ class ContinuousEngineBackend(EngineBackend):
             meta = self._stream_pending.pop(rid, None)
             if meta is None:
                 continue     # a closed-loop rid (modes must not mix)
-            q, action, hit, plen = meta
+            q, action, hit, plen, degraded = meta
             if gen.failed:
-                out = self._rejected_outcome(q, action, gen.failed)
+                out = self._failed_outcome(q, action, gen)
             else:
                 out = self._generated_outcome(q, action, plen,
-                                              gen.n_steps, hit)
+                                              gen.n_steps, hit, degraded)
             done.append(StreamCompletion(
                 rid=rid, outcome=out, admitted_at=gen.admitted_at,
                 finished_at=gen.finished_at))

@@ -69,6 +69,20 @@ class GatewayStats:
     shed: int = 0
     forced_refusals: int = 0
     depth_clamped: int = 0
+    # fault-tolerance counters — zero on a healthy run:
+    #   degraded  — served, but the action's retriever was rewritten to
+    #               the bm25 fallback (open breaker / retriever fault);
+    #               counted apart from sheds and forced refusals so load
+    #               degradation and fault degradation stay auditable
+    #   timed_out — cancelled mid-stream past the request deadline
+    #   retries   — transient-fault resubmissions (bounded, never past
+    #               the deadline)
+    #   faulted   — requests that still failed transiently after the
+    #               retry budget (or with retries disabled)
+    degraded: int = 0
+    timed_out: int = 0
+    retries: int = 0
+    faulted: int = 0
     total_reward: float = 0.0
     # mirrors of the backend's shared retrieval LRU counters (0/0 when
     # the backend serves uncached) — repeated queries in a stream stop
@@ -102,8 +116,16 @@ class Gateway:
                  action_space: Optional[ActionSpace] = None,
                  max_batch: int = 16, adaptive_refusal: bool = True,
                  base_refusal_share: float = 0.6, budget_targets=None,
-                 on_outcome: Optional[Callable] = None):
+                 on_outcome: Optional[Callable] = None, retry=None,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.policy = policy
+        # bounded deadline-aware resubmission of transient-fault
+        # outcomes (a repro.serving.faults.RetryPolicy; None disables —
+        # the closed-loop default, keeping pre-fault behaviour
+        # bit-identical).  `sleep` is the backoff sleeper (injectable
+        # for virtual-time tests).
+        self.retry = retry
+        self._sleep = sleep if sleep is not None else time.sleep
         self.backend = as_backend(backend)
         self.space = action_space or get_action_space()
         if state_fn is None:
@@ -160,6 +182,12 @@ class Gateway:
         self.stats.latency.record(lat_ms)
         if getattr(out, "rejected", False):
             self.stats.rejected += 1
+        if getattr(out, "degraded", False):
+            self.stats.degraded += 1
+        if getattr(out, "timed_out", False):
+            self.stats.timed_out += 1
+        elif getattr(out, "transient", False):
+            self.stats.faulted += 1
         self.stats.total_reward += rew
         self.stats.action_counts[a] += 1
         if self.on_outcome is not None:
@@ -170,6 +198,39 @@ class Gateway:
         if cache is not None:
             self.stats.retrieval_cache_hits = cache.hits
             self.stats.retrieval_cache_lookups = cache.lookups
+
+    def _retry_transients(self, batch: List[Request], acts: List[int],
+                          outs: List, execute) -> List:
+        """Closed-loop bounded retries: re-execute the transient-fault
+        subset of a served micro-batch (with backoff), never past a
+        request's ``deadline_ms`` budget.  ``execute(questions,
+        actions)`` runs the subset; healthy outcomes are kept as-is."""
+        if self.retry is None or self.retry.max_retries <= 0:
+            return outs
+        t0 = time.perf_counter()
+        for attempt in range(self.retry.max_retries):
+            idxs = [i for i, o in enumerate(outs)
+                    if getattr(o, "transient", False)
+                    and not getattr(o, "timed_out", False)]
+            if not idxs:
+                break
+            wait = self.retry.backoff(attempt)
+            elig = []
+            for i in idxs:
+                dl = batch[i].deadline_ms
+                if dl > 0 and (time.perf_counter() - t0 + wait) * 1e3 >= dl:
+                    continue     # cannot finish inside the deadline
+                elig.append(i)
+            if not elig:
+                break
+            if wait > 0:
+                self._sleep(wait)
+            self.stats.retries += len(elig)
+            redo = execute([batch[i].question for i in elig],
+                           [self.space[acts[i]] for i in elig])
+            for i, o in zip(elig, redo):
+                outs[i] = o
+        return outs
 
     def step(self) -> Optional[GatewayStats]:
         """Serve one micro-batch off the queue."""
@@ -195,6 +256,8 @@ class Gateway:
             outs = self.backend.execute_mixed(
                 [r.question for r in batch],
                 [self.space[a] for a in acts])
+            outs = self._retry_transients(batch, acts, outs,
+                                          self.backend.execute_mixed)
             lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(batch), 1)
             for r, a, out in zip(batch, acts, outs):
                 self._account(r, a, out, lat_ms)
@@ -212,6 +275,11 @@ class Gateway:
             t0 = time.perf_counter()
             outs = self.backend.execute_batch(
                 [batch[i].question for i in idxs], action)
+            if self.retry is not None:
+                outs = self._retry_transients(
+                    [batch[i] for i in idxs], [a] * len(idxs), outs,
+                    lambda qs, actions: self.backend.execute_batch(
+                        qs, actions[0]))
             lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(idxs), 1)
             for i, out in zip(idxs, outs):
                 self._account(batch[i], a, out, lat_ms)

@@ -23,6 +23,15 @@ _LAZY = {
     "AsyncGateway": "repro.serving.streaming",
     "StreamHandle": "repro.serving.streaming",
     "AdmissionConfig": "repro.serving.streaming",
+    "FaultSpec": "repro.serving.faults",
+    "FaultPlan": "repro.serving.faults",
+    "ChaosInjector": "repro.serving.faults",
+    "ChaosRetriever": "repro.serving.faults",
+    "ChaosExecutor": "repro.serving.faults",
+    "RetryPolicy": "repro.serving.faults",
+    "FaultError": "repro.serving.faults",
+    "TransientFaultError": "repro.serving.faults",
+    "FaultTimeoutError": "repro.serving.faults",
     "LoadGenerator": "repro.serving.traffic",
     "PoissonProcess": "repro.serving.traffic",
     "OnOffProcess": "repro.serving.traffic",

@@ -52,6 +52,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro.core.errors import TransientFaultError
 from repro.data.tokenizer import PAD
 
 
@@ -60,6 +61,10 @@ class SlotRequest:
     rid: int
     prompt: List[int]
     max_new_tokens: int
+    # engine-clock instant after which the request is worthless; 0 = no
+    # deadline.  Enforced mid-stream: a resident slot past its deadline
+    # is cancelled and freed at the next control sync.
+    deadline_at: float = 0.0
 
 
 @dataclass
@@ -73,7 +78,13 @@ class CompletedGeneration:
     # the request's first token, so this is the time-to-first-token
     # stamp open-loop serving reports against per-request deadlines
     admitted_at: float = 0.0
-    failed: str = ""          # non-empty: rejected at submit, never admitted
+    failed: str = ""          # non-empty: not served (reason)
+    # failed on a retryable fault (quarantined slot, executor fault) —
+    # the gateway may resubmit within the request's deadline
+    transient: bool = False
+    # cancelled mid-stream because its deadline passed (distinct from
+    # transient: retrying a timed-out request cannot help)
+    timed_out: bool = False
 
 
 @dataclass
@@ -86,6 +97,13 @@ class EngineStats:
     n_decode_steps: int = 0
     cache_allocations: int = 0
     max_concurrent: int = 0
+    # fault-tolerance counters (all zero on a healthy run)
+    n_quarantined: int = 0    # slots pulled from service (nan + watchdog)
+    n_nan_trips: int = 0      # quarantines from device NaN/inf detection
+    n_watchdog_trips: int = 0  # quarantines from the no-progress watchdog
+    n_exec_faults: int = 0    # executor admit/decode calls that raised
+    n_requeued: int = 0       # faulted requests re-admitted by the engine
+    n_timed_out: int = 0      # requests cancelled past their deadline
     # recent per-admission concurrency trace (bounded) — lets tests
     # assert requests from different action buckets were in flight
     # together without growing in long serving runs
@@ -108,7 +126,9 @@ class ContinuousEngine:
                  sync_every: int = 4, prefill_pad_multiple: int = 1,
                  prefill_batch: int = 1, admission_lookahead: int = 16,
                  moe_fn=None, mla_absorb: bool = False,
-                 mesh=None, executor=None, clock=None):
+                 mesh=None, executor=None, clock=None,
+                 watchdog_syncs: int = 8, max_requeues: int = 0,
+                 chaos=None):
         if executor is None:
             if model is None:
                 raise ValueError("ContinuousEngine needs model+params or "
@@ -122,6 +142,9 @@ class ContinuousEngine:
             executor = (ShardedExecutor(model, params, mesh=mesh, **kw)
                         if mesh is not None
                         else SingleDeviceExecutor(model, params, **kw))
+        if chaos is not None and getattr(chaos, "armed", False):
+            from repro.serving.faults import ChaosExecutor
+            executor = ChaosExecutor(executor, chaos)
         self.executor = executor
         self.model = model
         self.params = params
@@ -137,6 +160,13 @@ class ContinuousEngine:
         # virtual clock (deterministic latency accounting); default is
         # the host monotonic clock.
         self._clock = clock if clock is not None else time.perf_counter
+        # watchdog: quarantine a slot after this many consecutive syncs
+        # with an active slot making zero token progress (0 = off)
+        self.watchdog_syncs = max(0, watchdog_syncs)
+        # how many times a faulted (quarantined / executor-fault)
+        # request is re-admitted before failing as transient (0 = fail
+        # immediately; the gateway layer owns deadline-aware retries)
+        self.max_requeues = max(0, max_requeues)
         self.stats = EngineStats()
         self.stats.cache_allocations = executor.cache_allocations
 
@@ -146,9 +176,18 @@ class ContinuousEngine:
         self._gen = np.zeros(S, np.int32)
         self._plen = np.zeros(S, np.int32)
         self._rid: List[Optional[int]] = [None] * S
+        # the resident request per slot (needed to requeue on fault and
+        # to enforce its deadline mid-stream)
+        self._slot_req: List[Optional[SlotRequest]] = [None] * S
         # slots admitted since the last sync: their host mirrors are
         # stale, so harvest must not touch them until the next sync
         self._dirty: Set[int] = set()
+        # poisoned slots pulled from service — never re-admitted until
+        # reset_quarantine() clears their fault flags
+        self._quarantined: Set[int] = set()
+        self._stall = np.zeros(S, np.int32)      # consecutive no-progress
+        self._last_gen = np.full(S, -1, np.int32)  # -1 = just admitted
+        self._requeues: Dict[int, int] = {}
         self._free: Deque[int] = deque(range(S))
         self._queue: Deque[SlotRequest] = deque()
         self._results: Dict[int, CompletedGeneration] = {}
@@ -164,7 +203,8 @@ class ContinuousEngine:
         return rid
 
     def submit(self, rid: int, prompt: Sequence[int],
-               max_new_tokens: int = 16, *, strict: bool = True) -> bool:
+               max_new_tokens: int = 16, *, strict: bool = True,
+               deadline_at: float = 0.0) -> bool:
         """Enqueue one request.  Returns True when accepted.
 
         An over-length prompt (padded length + generation budget beyond
@@ -198,7 +238,8 @@ class ContinuousEngine:
                 prompt_len=plen, finished_at=now, admitted_at=now,
                 failed=reason)
             return False
-        self._queue.append(SlotRequest(rid, list(prompt), max_new))
+        self._queue.append(SlotRequest(rid, list(prompt), max_new,
+                                       deadline_at=deadline_at))
         return True
 
     def _padded_len(self, n: int) -> int:
@@ -231,7 +272,12 @@ class ContinuousEngine:
     def _start_admissions(self) -> None:
         """Dispatch prefill+insert for every admittable group — async,
         no host sync; the admitted slots stay ``dirty`` until the next
-        control sync reveals their device state."""
+        control sync reveals their device state.
+
+        A transient executor fault on ``admit`` fails (or requeues)
+        only that group's requests, returns its slots to the free pool,
+        and stops admitting for this step — the decode stream and the
+        rest of the queue keep serving."""
         PB = self.prefill_batch
         while self._free and self._queue:
             group = self._next_group()
@@ -245,15 +291,27 @@ class ContinuousEngine:
             slot_idx[:len(group)] = slots
             limits = np.zeros(PB, np.int32)
             limits[:len(group)] = [req.max_new_tokens for req in group]
-            self.executor.admit(toks, slot_idx, limits)
+            try:
+                self.executor.admit(toks, slot_idx, limits)
+            except TransientFaultError as exc:
+                self.stats.n_exec_faults += 1
+                for slot in reversed(slots):
+                    self._free.appendleft(slot)
+                for req in reversed(group):
+                    self._fail_or_requeue(req, f"admit fault: {exc}",
+                                          prompt_len=plen)
+                break
             self.stats.n_prefills += 1
             now = self._clock()
             for req, slot in zip(group, slots):
                 self.stats.n_admitted += 1
                 self._rid[slot] = req.rid
+                self._slot_req[slot] = req
                 self._plen[slot] = plen
                 self._admitted_at[req.rid] = now
                 self._dirty.add(slot)
+                self._stall[slot] = 0
+                self._last_gen[slot] = -1
             n_live = sum(r is not None for r in self._rid)
             self.stats.concurrency_trace.append(n_live)
             self.stats.max_concurrent = max(self.stats.max_concurrent,
@@ -283,8 +341,162 @@ class ContinuousEngine:
                 finished_at=now,
                 admitted_at=self._admitted_at.pop(rid, now))
             self.stats.n_completed += 1
+            self._requeues.pop(rid, None)
             self._rid[slot] = None
+            self._slot_req[slot] = None
             self._free.append(slot)
+
+    # -- fault tolerance -----------------------------------------------
+
+    def _fail_or_requeue(self, req: SlotRequest, reason: str, *,
+                         prompt_len: int = 0) -> None:
+        """A request hit a transient fault: put it back at the queue
+        head (up to ``max_requeues`` times) or complete it failed with
+        ``transient=True`` so the gateway's retry path can take over."""
+        self._admitted_at.pop(req.rid, None)
+        if self._requeues.get(req.rid, 0) < self.max_requeues:
+            self._requeues[req.rid] = self._requeues.get(req.rid, 0) + 1
+            self.stats.n_requeued += 1
+            self._queue.appendleft(req)
+            return
+        self._requeues.pop(req.rid, None)
+        now = self._clock()
+        self._results[req.rid] = CompletedGeneration(
+            rid=req.rid, tokens=np.zeros(0, np.int32), n_steps=0,
+            prompt_len=prompt_len or self._padded_len(len(req.prompt)),
+            finished_at=now, admitted_at=now, failed=reason,
+            transient=True)
+
+    def _quarantine(self, slot: int, reason: str) -> None:
+        """Pull a poisoned slot from service: deactivate it on device,
+        fail/requeue ONLY its request, and keep the slot out of the
+        free pool until :meth:`reset_quarantine` — its peers in the
+        batch keep decoding untouched."""
+        self._quarantined.add(slot)
+        self.stats.n_quarantined += 1
+        deact = getattr(self.executor, "deactivate", None)
+        if deact is not None:
+            deact([slot])
+        self._active[slot] = False
+        req = self._slot_req[slot]
+        self._rid[slot] = None
+        self._slot_req[slot] = None
+        if req is not None:
+            self._fail_or_requeue(req, reason)
+
+    def _check_health(self) -> None:
+        """Post-sync health pass: device-detected NaN/inf poison flags,
+        then the no-progress watchdog.  Runs BEFORE harvest so a
+        poisoned slot (deactivated on device by the executor) is
+        quarantined rather than harvested as a normal completion."""
+        sf = getattr(self.executor, "slot_faults", None)
+        if sf is not None:
+            bad = sf()
+            if bad is not None:
+                for s in np.flatnonzero(bad):
+                    s = int(s)
+                    if (self._rid[s] is not None and s not in self._dirty
+                            and s not in self._quarantined):
+                        self.stats.n_nan_trips += 1
+                        self._quarantine(s, "nan/inf decode logits")
+        if self.watchdog_syncs <= 0:
+            return
+        for s in range(self.num_slots):
+            if (self._rid[s] is None or s in self._dirty
+                    or not self._active[s]):
+                continue
+            if self._last_gen[s] >= 0 and self._gen[s] == self._last_gen[s]:
+                self._stall[s] += 1
+                if self._stall[s] >= self.watchdog_syncs:
+                    self.stats.n_watchdog_trips += 1
+                    self._quarantine(s, "watchdog: no token progress")
+                    continue
+            else:
+                self._stall[s] = 0
+            self._last_gen[s] = self._gen[s]
+
+    def _expire_residents(self) -> None:
+        """Cancel resident requests whose deadline has passed: the slot
+        is deactivated and freed immediately (a slow generation cannot
+        hold a slot past its SLO) and the request completes as a
+        distinct timed-out failure.  Queued requests past deadline are
+        timed out before wasting a prefill."""
+        now = self._clock()
+        expired = [s for s in range(self.num_slots)
+                   if self._slot_req[s] is not None and s not in self._dirty
+                   and s not in self._quarantined
+                   and 0 < self._slot_req[s].deadline_at < now]
+        if expired:
+            deact = getattr(self.executor, "deactivate", None)
+            if deact is not None:
+                deact(expired)
+        for s in expired:
+            req = self._slot_req[s]
+            self._time_out(req, admitted_at=self._admitted_at.pop(
+                req.rid, now))
+            self._active[s] = False
+            self._rid[s] = None
+            self._slot_req[s] = None
+            self._free.append(s)
+        if self._queue:
+            keep = deque()
+            for req in self._queue:
+                if 0 < req.deadline_at < now:
+                    self._time_out(req, admitted_at=now)
+                else:
+                    keep.append(req)
+            self._queue = keep
+
+    def _time_out(self, req: SlotRequest, *, admitted_at: float) -> None:
+        self.stats.n_timed_out += 1
+        self._requeues.pop(req.rid, None)
+        self._results[req.rid] = CompletedGeneration(
+            rid=req.rid, tokens=np.zeros(0, np.int32), n_steps=0,
+            prompt_len=self._padded_len(len(req.prompt)),
+            finished_at=self._clock(), admitted_at=admitted_at,
+            failed="deadline exceeded", timed_out=True)
+
+    def _abort_residents(self, reason: str) -> None:
+        """A decode chunk raised: every resident request aborts (requeue
+        or transient failure), slots return to the free pool, and the
+        serving loop stays alive."""
+        slots = [s for s in range(self.num_slots)
+                 if self._rid[s] is not None]
+        deact = getattr(self.executor, "deactivate", None)
+        if deact is not None and slots:
+            deact(slots)
+        for s in slots:
+            req = self._slot_req[s]
+            self._rid[s] = None
+            self._slot_req[s] = None
+            self._active[s] = False
+            self._stall[s] = 0
+            self._last_gen[s] = -1
+            self._free.append(s)
+            if req is not None:
+                self._fail_or_requeue(req, reason)
+        self._dirty.clear()
+
+    @property
+    def quarantined_slots(self) -> Set[int]:
+        return set(self._quarantined)
+
+    def reset_quarantine(self) -> List[int]:
+        """Return quarantined slots to service (operator/bench action
+        after the underlying fault clears): fault flags are reset on
+        the device and the slots rejoin the free pool."""
+        slots = sorted(self._quarantined)
+        if not slots:
+            return []
+        clear = getattr(self.executor, "clear_slot_faults", None)
+        if clear is not None:
+            clear(slots)
+        for s in slots:
+            self._stall[s] = 0
+            self._last_gen[s] = -1
+            self._free.append(s)
+        self._quarantined.clear()
+        return slots
 
     # -- driver --------------------------------------------------------
 
@@ -308,23 +520,56 @@ class ContinuousEngine:
         with no resident work, just admissions.  This is ``run()``'s
         loop body split out so an always-on serving thread can
         interleave engine progress with new submissions instead of
-        draining to empty."""
+        draining to empty.
+
+        Fault handling: a transient executor fault on the decode chunk
+        aborts (requeues or fails) the resident requests and returns —
+        the loop survives and keeps admitting.  After every control
+        sync a health pass quarantines poisoned slots (device NaN/inf
+        flags, no-progress watchdog) and a deadline pass cancels
+        expired requests, both BEFORE harvest."""
         self._harvest()
         if self._active.any():
             # decode chunk first (async), then overlap the next
             # admission groups' prefills with it; block only at the
             # control sync
-            self.executor.decode_chunk()
+            try:
+                self.executor.decode_chunk()
+            except TransientFaultError as exc:
+                self.stats.n_exec_faults += 1
+                self._abort_residents(f"decode fault: {exc}")
+                return
             self.stats.n_decode_chunks += 1
             self.stats.n_decode_steps += self.sync_every
             self._start_admissions()
             self._sync()
+            self._check_health()
+            self._expire_residents()
             self._harvest()
         else:
             self._start_admissions()
             if self._dirty:
                 self._sync()
+                self._check_health()
+                self._expire_residents()
                 self._harvest()
+            elif self._queue:
+                self._expire_residents()
+                if not self._free and self.n_resident == 0:
+                    # every slot is quarantined: nothing can ever be
+                    # admitted — fail the queue transiently rather than
+                    # spinning forever (callers see resolved requests)
+                    while self._queue:
+                        req = self._queue.popleft()
+                        now = self._clock()
+                        self._requeues.pop(req.rid, None)
+                        self._results[req.rid] = CompletedGeneration(
+                            rid=req.rid, tokens=np.zeros(0, np.int32),
+                            n_steps=0,
+                            prompt_len=self._padded_len(len(req.prompt)),
+                            finished_at=now, admitted_at=now,
+                            failed="all slots quarantined",
+                            transient=True)
 
     def poll(self) -> Dict[int, CompletedGeneration]:
         """Advance the engine by one ``step`` (when it has work) and

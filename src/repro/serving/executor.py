@@ -48,6 +48,22 @@ numpy fake):
         block and download the output buffer.
     attrs: num_slots, max_len, max_new_cap, sync_every, prefill_batch,
         cache_allocations.
+
+    Optional health extensions (the scheduler probes via ``getattr`` so
+    pure-numpy fakes without them keep working):
+
+    slot_faults() -> (S,) bool
+        per-slot poison flags: a slot goes bad when any of its decode
+        logits turn NaN/inf (detected on-device inside the chunk scan —
+        the slot is immediately deactivated there so it stops writing
+        tokens, and stays flagged until cleared).
+    deactivate(slots)
+        clear the active bits for the given slots (quarantine/cancel).
+    clear_slot_faults(slots)
+        reset poison flags (scheduler quarantine reset).
+
+    Health checks are on by default; ``health_checks=False`` removes
+    the isfinite test from the decode scan entirely.
 """
 from __future__ import annotations
 
@@ -70,7 +86,7 @@ class SingleDeviceExecutor:
                  max_len: int = 512, max_new_cap: int = 64,
                  sync_every: int = 4, prefill_batch: int = 1,
                  moe_fn: Optional[Callable] = None,
-                 mla_absorb: bool = False):
+                 mla_absorb: bool = False, health_checks: bool = True):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -80,6 +96,7 @@ class SingleDeviceExecutor:
         self.prefill_batch = max(1, min(prefill_batch, num_slots))
         self.moe_fn = moe_fn
         self.mla_absorb = mla_absorb
+        self.health_checks = health_checks
 
         # the ONLY cache allocations in the executor's lifetime: the
         # slot cache and the prefill scratch (both reused forever)
@@ -93,6 +110,7 @@ class SingleDeviceExecutor:
         self._dgen = jnp.zeros(S, jnp.int32)    # tokens generated so far
         self._dlimit = jnp.zeros(S, jnp.int32)  # per-slot max_new_tokens
         self._dout = jnp.zeros((S, cap), jnp.int32)
+        self._dbad = jnp.zeros(S, bool)         # NaN/inf poison flags
 
         self._place()
         self._compile()
@@ -107,7 +125,9 @@ class SingleDeviceExecutor:
         self._commit = jax.jit(self._commit_fn,
                                donate_argnums=(0, 2, 3, 4, 5, 6))
         self._decode = jax.jit(self._decode_chunk_fn,
-                               donate_argnums=(1, 2, 3, 4, 6))
+                               donate_argnums=(1, 2, 3, 4, 6, 7))
+        self._clear_flags = jax.jit(self._clear_flags_fn,
+                                    donate_argnums=(0,))
 
     def _host_to_device(self, x: np.ndarray):
         return jnp.asarray(x)
@@ -152,19 +172,30 @@ class SingleDeviceExecutor:
         out = out.at[slots, 0].set(firsts, mode="drop")
         return new, tok, active, gen, limit, out
 
-    def _decode_chunk_fn(self, params, cache, tok, active, gen, limit, out):
-        """`sync_every` decode steps over all slots, done-mask on device."""
+    def _decode_chunk_fn(self, params, cache, tok, active, gen, limit, out,
+                         bad):
+        """`sync_every` decode steps over all slots, done-mask on device.
+
+        With ``health_checks`` on, each step tests the step's final
+        logits row for NaN/inf: a poisoned slot is deactivated in the
+        same step (its garbage token is never written, ``gen`` does not
+        advance) and its ``bad`` flag latches until the scheduler
+        clears it — the rest of the batch decodes on untouched."""
         S, cap = out.shape
         sidx = jnp.arange(S)
 
         def step(carry, _):
-            cache, tok, active, gen, out = carry
+            cache, tok, active, gen, out, bad = carry
             pos0 = cache["pos"]
             inp = jnp.where(active, tok, PAD)
             logits, cache = self.model.decode(
                 params, {"tokens": inp[:, None]}, cache, moe_fn=self.moe_fn,
                 mla_absorb=self.mla_absorb)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            if self.health_checks:
+                row_bad = active & ~jnp.isfinite(logits[:, -1]).all(axis=-1)
+                bad = bad | row_bad
+                active = active & ~row_bad
             # hold position for idle slots (their kv write lands one past
             # their valid length and is masked / overwritten on admit)
             cache["pos"] = jnp.where(active, cache["pos"], pos0)
@@ -174,11 +205,16 @@ class SingleDeviceExecutor:
             gen = gen + active.astype(jnp.int32)
             active = active & (nxt != EOS) & (gen < limit)
             tok = jnp.where(active, nxt, tok)
-            return (cache, tok, active, gen, out), None
+            return (cache, tok, active, gen, out, bad), None
 
-        carry, _ = jax.lax.scan(step, (cache, tok, active, gen, out),
+        carry, _ = jax.lax.scan(step, (cache, tok, active, gen, out, bad),
                                 None, length=self.sync_every)
         return carry
+
+    @staticmethod
+    def _clear_flags_fn(arr, idx):
+        """Clear boolean slot flags (active bits / poison flags)."""
+        return arr.at[idx].set(False, mode="drop")
 
     # -- protocol -------------------------------------------------------
 
@@ -200,9 +236,9 @@ class SingleDeviceExecutor:
 
     def decode_chunk(self) -> None:
         (self._cache, self._dtok, self._dactive, self._dgen,
-         self._dout) = self._decode(
+         self._dout, self._dbad) = self._decode(
             self.params, self._cache, self._dtok, self._dactive,
-            self._dgen, self._dlimit, self._dout)
+            self._dgen, self._dlimit, self._dout, self._dbad)
 
     def sync_control(self):
         """The every-K host sync: only the two tiny control arrays come
@@ -212,6 +248,29 @@ class SingleDeviceExecutor:
 
     def fetch_outputs(self) -> np.ndarray:
         return np.array(self._dout)
+
+    # -- health / quarantine control ------------------------------------
+
+    def slot_faults(self) -> np.ndarray:
+        """Per-slot NaN/inf poison flags (host copy; blocks briefly —
+        call right after ``sync_control``, when the chunk is done)."""
+        return np.array(self._dbad)
+
+    def deactivate(self, slots) -> None:
+        """Clear active bits for the given slots (quarantine or
+        mid-stream cancel) without touching their cache rows."""
+        idx = np.asarray(list(slots), np.int32)
+        if idx.size == 0:
+            return
+        self._dactive = self._clear_flags(self._dactive,
+                                          self._host_to_device(idx))
+
+    def clear_slot_faults(self, slots) -> None:
+        idx = np.asarray(list(slots), np.int32)
+        if idx.size == 0:
+            return
+        self._dbad = self._clear_flags(self._dbad,
+                                       self._host_to_device(idx))
 
 
 class ShardedExecutor(SingleDeviceExecutor):
@@ -282,6 +341,7 @@ class ShardedExecutor(SingleDeviceExecutor):
         self._dgen = jax.device_put(self._dgen, self._slot_sh)
         self._dlimit = jax.device_put(self._dlimit, self._slot_sh)
         self._dout = jax.device_put(self._dout, self._out_sh)
+        self._dbad = jax.device_put(self._dbad, self._slot_sh)
 
     def _compile(self) -> None:
         s = self._slot_sh
@@ -292,8 +352,10 @@ class ShardedExecutor(SingleDeviceExecutor):
             self._commit_fn, donate_argnums=(0, 2, 3, 4, 5, 6),
             out_shardings=(self._cache_sh, s, s, s, s, self._out_sh))
         self._decode = jax.jit(
-            self._decode_chunk_fn, donate_argnums=(1, 2, 3, 4, 6),
-            out_shardings=(self._cache_sh, s, s, s, self._out_sh))
+            self._decode_chunk_fn, donate_argnums=(1, 2, 3, 4, 6, 7),
+            out_shardings=(self._cache_sh, s, s, s, self._out_sh, s))
+        self._clear_flags = jax.jit(self._clear_flags_fn,
+                                    donate_argnums=(0,), out_shardings=s)
 
     def _host_to_device(self, x: np.ndarray):
         # small host control inputs (slot ids, limits) ride replicated

@@ -18,7 +18,8 @@ from repro.routing.registry import ActionSpace, get_action_space
 from repro.data.synthetic_squad import Question
 from repro.generation.simulator import SimulatedGenerator
 from repro.retrieval.bm25 import BM25Index
-from repro.retrieval.hybrid import Retriever, resolve_retrievers
+from repro.retrieval.hybrid import (Retriever, resolve_retrievers,
+                                    retrieve_with_fallback)
 
 
 @dataclass
@@ -37,6 +38,15 @@ class ActionOutcome:
     # treats the unserved request as an SLO violation, but downstream
     # consumers can tell the two apart (Gateway counts them separately)
     rejected: bool = False
+    # fault-tolerance facets (all default False — healthy outcomes are
+    # unchanged).  degraded: the action was served but rewritten to a
+    # fallback (e.g. dense breaker open -> bm25 passages).  timed_out:
+    # the request's deadline passed mid-flight and it was cancelled.
+    # transient: the request failed on a retryable fault — the gateway
+    # may resubmit it (bounded, deadline-aware) before accounting.
+    degraded: bool = False
+    timed_out: bool = False
+    transient: bool = False
 
     def to_row(self) -> dict:
         return asdict(self)
@@ -66,12 +76,30 @@ class RAGPipeline:
                 f"available: {sorted(self.retrievers)}") from None
         return r.passages(question, k)
 
+    def retrieve_degradable(self, question: str, k: int,
+                            retriever: str = "bm25"
+                            ) -> tuple:
+        """(passages, degraded) — like :meth:`retrieve`, but an open
+        breaker or failing retriever degrades to the bm25 fallback
+        instead of raising (raises TransientFaultError only when the
+        fallback path fails too)."""
+        if k <= 0:
+            return [], False
+        if retriever not in self.retrievers:
+            raise KeyError(
+                f"action retriever {retriever!r} not configured; "
+                f"available: {sorted(self.retrievers)}")
+        return retrieve_with_fallback(self.retrievers, retriever,
+                                      question, k)
+
     def execute(self, q: Question, action: Action) -> ActionOutcome:
         if action.mode == "refuse":
             out = self.generator.refuse(q.qid, q.text)
             hit = False
+            degraded = False
         else:
-            passages = self.retrieve(q.text, action.k, action.retriever)
+            passages, degraded = self.retrieve_degradable(
+                q.text, action.k, action.retriever)
             out = self.generator.generate(
                 q.qid, action.idx, action.mode, q.text, passages,
                 answerable=q.answerable, gold_answer=q.gold_answer)
@@ -81,7 +109,8 @@ class RAGPipeline:
             qid=q.qid, action=action.idx, correct=out.correct,
             refused=out.refused, hallucinated=out.hallucinated,
             cost_tokens=float(out.cost_tokens), hit=hit,
-            answerable=q.answerable, answer=out.answer)
+            answerable=q.answerable, answer=out.answer,
+            degraded=degraded)
 
     def sweep(self, q: Question,
               space: Optional[ActionSpace] = None) -> list:

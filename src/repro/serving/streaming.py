@@ -50,12 +50,17 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from collections import deque
 
+from repro.core.errors import TransientFaultError
 from repro.routing.gateway import Gateway, GatewayStats, Request
 from repro.routing.registry import Action, ActionSpace
+from repro.serving.faults import RetryPolicy
 from repro.serving.pipeline import ActionOutcome
 from repro.serving.slo_budget import BudgetState, latency_target
 
 SHED_TEXT = "<shed: admission control rejected this request>"
+
+# sentinel: "caller didn't say" vs an explicit retry=None (disabled)
+_DEFAULT_RETRY = object()
 
 
 @dataclass(frozen=True)
@@ -95,6 +100,10 @@ class StreamHandle:
     forced_refusal: bool = False
     first_token_t: Optional[float] = None
     completed_t: Optional[float] = None
+    retries: int = 0                  # transient-fault resubmissions
+    # set when the gateway itself died (backend raised a non-transient
+    # exception): result() re-raises it instead of returning an outcome
+    error: Optional[BaseException] = None
     _event: threading.Event = field(default_factory=threading.Event)
     # gateway-internal: routed action + whether burn forced the refusal
     _action: int = -1
@@ -104,10 +113,14 @@ class StreamHandle:
         return self._event.is_set()
 
     def result(self, timeout: Optional[float] = None) -> ActionOutcome:
-        """Block until completed (or raise TimeoutError)."""
+        """Block until completed (or raise TimeoutError).  Raises the
+        gateway's fatal error if serving died while this was in
+        flight — a hung ``wait`` is never the failure mode."""
         if not self._event.wait(timeout):
             raise TimeoutError(
                 f"request qid={self.request.qid} still in flight")
+        if self.error is not None:
+            raise self.error
         return self.outcome
 
     @property
@@ -164,13 +177,19 @@ class AsyncGateway(Gateway):
                  clock: Optional[Callable[[], float]] = None,
                  deadline_ms: float = 0.0,
                  latency_objective: float = 0.90,
-                 route_batch: int = 16, **gateway_kw):
+                 route_batch: int = 16, retry=_DEFAULT_RETRY,
+                 **gateway_kw):
         if not hasattr(backend, "stream_submit"):
             raise TypeError(
                 f"AsyncGateway needs a streaming backend (stream_submit/"
                 f"stream_poll); {type(backend).__name__} has neither — "
                 f"use ContinuousEngineBackend or SimulatorBackend")
-        super().__init__(policy, backend, **gateway_kw)
+        # streaming retries default ON (one deadline-aware resubmission
+        # per request): with no faults in play the transient path never
+        # fires, so this is parity-safe; pass retry=None to disable
+        if retry is _DEFAULT_RETRY:
+            retry = RetryPolicy(max_retries=1)
+        super().__init__(policy, backend, retry=retry, **gateway_kw)
         self.admission = admission or AdmissionConfig()
         self.clock = clock if clock is not None else time.perf_counter
         # default per-request deadline (ms) stamped at submission when
@@ -188,6 +207,17 @@ class AsyncGateway(Gateway):
         self._lock = threading.Lock()
         self._arrivals: Deque[StreamHandle] = deque()
         self._in_flight: Dict[int, StreamHandle] = {}   # rid -> handle
+        # transient-fault resubmissions waiting out their backoff:
+        # (not-before gateway-clock time, handle), submission order
+        self._retry_q: List[Tuple[float, StreamHandle]] = []
+        # fatal serving error (backend raised non-transiently): set
+        # once, rejects everything in flight, makes drain/stop return
+        self._failed: Optional[BaseException] = None
+        # handles popped off the queues and being dispatched by the
+        # CURRENT pump iteration — they live in pump-local lists, so
+        # _fail must see them here or a fatal mid-dispatch exception
+        # would strand them pending forever (the silent-hang bug)
+        self._processing: List[StreamHandle] = []
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._shallowest: Dict[Tuple[str, str], Action] = {}
@@ -211,14 +241,28 @@ class AsyncGateway(Gateway):
         request.arrival_ms = now * 1e3
         handle = StreamHandle(request=request, arrival_t=now)
         with self._lock:
-            self._arrivals.append(handle)
+            failed = self._failed
+            if failed is None:
+                self._arrivals.append(handle)
+        if failed is not None:
+            # a dead gateway must not hand out handles that never
+            # complete: reject immediately with the fatal error
+            handle.error = failed
+            handle._complete(self._fault_outcome(
+                request, -1, f"gateway failed: {failed}"), now)
         return handle
 
     @property
     def in_flight(self) -> int:
         """Requests somewhere between submission and completion."""
         with self._lock:
-            return len(self._arrivals) + len(self._in_flight)
+            return (len(self._arrivals) + len(self._in_flight)
+                    + len(self._retry_q))
+
+    @property
+    def failed(self) -> Optional[BaseException]:
+        """The fatal serving error, if the gateway has died."""
+        return self._failed
 
     # -- admission control ---------------------------------------------
 
@@ -269,6 +313,66 @@ class AsyncGateway(Gateway):
                 return shallow.idx, "clamped"
         return a, ""
 
+    # -- fault handling -------------------------------------------------
+
+    def _fault_outcome(self, req: Request, a: int,
+                       reason: str) -> ActionOutcome:
+        """Terminal transient-failure outcome (typed ``transient`` so
+        GatewayStats counts it under ``faulted``, apart from sheds and
+        policy refusals)."""
+        ref = self.space.refuse_action
+        idx = a if a >= 0 else (ref if ref is not None else -1)
+        return ActionOutcome(
+            qid=req.qid, action=idx, correct=False, refused=True,
+            hallucinated=False, cost_tokens=0.0, hit=False,
+            answerable=req.question.answerable,
+            answer=f"<transient fault: {reason}>", transient=True)
+
+    def _deadline_at(self, h: StreamHandle) -> float:
+        """Absolute gateway-clock deadline for the backend to enforce
+        mid-stream (0 = none)."""
+        if h.request.deadline_ms <= 0:
+            return 0.0
+        return h.arrival_t + h.request.deadline_ms / 1e3
+
+    def _try_schedule_retry(self, h: StreamHandle, now: float) -> bool:
+        """Queue one bounded, deadline-aware resubmission for a
+        transient failure.  Never schedules a retry whose backoff alone
+        would land past the request's deadline.  Lock held."""
+        if self.retry is None or h.retries >= self.retry.max_retries:
+            return False
+        wait = self.retry.backoff(h.retries)
+        dl = h.request.deadline_ms
+        if dl > 0 and (now - h.arrival_t + wait) * 1e3 >= dl:
+            return False
+        h.retries += 1
+        self.stats.retries += 1
+        self._retry_q.append((now + wait, h))
+        return True
+
+    def _submit_handle(self, h: StreamHandle, a: int, now: float, *,
+                       forced: bool) -> None:
+        """Dispatch one routed handle into the backend stream; a
+        transient fault at submit becomes a retry (or a terminal
+        ``faulted`` outcome once the budget is spent).  Lock held."""
+        h._action = a
+        h._forced = forced
+        try:
+            rid, immediate = self.backend.stream_submit(
+                h.request.question, self.space[a],
+                deadline_at=self._deadline_at(h))
+        except TransientFaultError as exc:
+            if not self._try_schedule_retry(h, now):
+                t = self.clock()
+                self._account_stream(h, a, self._fault_outcome(
+                    h.request, a, str(exc)), t, t, forced=forced)
+            return
+        if immediate is not None:
+            t = self.clock()
+            self._account_stream(h, a, immediate, t, t, forced=forced)
+        else:
+            self._in_flight[rid] = h
+
     # -- the serving loop body -----------------------------------------
 
     def pump(self) -> int:
@@ -276,12 +380,38 @@ class AsyncGateway(Gateway):
         control, route + dispatch the admitted batch, advance the
         engine one step, account + complete harvested requests.
         Returns the number of events handled (0 = idle).  Thread-safe;
-        the background thread just calls this in a loop."""
+        the background thread just calls this in a loop.
+
+        A non-transient backend exception marks the whole gateway
+        failed (every in-flight handle is rejected with the error so
+        no waiter hangs) and re-raises."""
+        try:
+            return self._pump_once()
+        except Exception as exc:
+            self._fail(exc)
+            raise
+
+    def _pump_once(self) -> int:
         n_events = 0
         with self._lock:
+            self._processing = []
+            # 0) resubmit retries whose backoff has elapsed (already
+            #    routed — they bypass admission and routing)
+            now = self.clock()
+            if self._retry_q:
+                due = [(t, h) for t, h in self._retry_q if t <= now]
+                self._retry_q = [(t, h) for t, h in self._retry_q
+                                 if t > now]
+                self._processing.extend(h for _, h in due)
+                for _, h in due:
+                    self._submit_handle(h, h._action, now,
+                                        forced=h._forced)
+                    n_events += 1
+
             batch: List[StreamHandle] = []
             while self._arrivals and len(batch) < self.route_batch:
                 batch.append(self._arrivals.popleft())
+            self._processing.extend(batch)
 
             # 1) queue-level admission: shed before spending any routing
             #    or retrieval work on the request
@@ -311,29 +441,56 @@ class AsyncGateway(Gateway):
                         self.stats.forced_refusals += 1
                     elif what == "clamped":
                         self.stats.depth_clamped += 1
-                    rid, immediate = self.backend.stream_submit(
-                        h.request.question, self.space[a])
-                    if immediate is not None:
-                        t = self.clock()
-                        self._account_stream(h, a, immediate, t, t,
-                                             forced=(what == "forced_refuse"))
-                    else:
-                        h._action = a            # routed action, for harvest
-                        h._forced = (what == "forced_refuse")
-                        self._in_flight[rid] = h
+                    self._submit_handle(h, a, self.clock(),
+                                        forced=(what == "forced_refuse"))
                     n_events += 1
 
-            # 4) advance the engine and harvest
+            # 4) advance the engine and harvest; transient completions
+            #    (executor fault, circuit denial) go back through the
+            #    retry budget instead of straight to the caller
             for comp in self.backend.stream_poll():
                 h = self._in_flight.pop(comp.rid, None)
                 if h is None:
                     continue
-                self._account_stream(h, h._action, comp.outcome,
+                out = comp.outcome
+                if (getattr(out, "transient", False)
+                        and not getattr(out, "timed_out", False)
+                        and self._try_schedule_retry(h, comp.finished_at)):
+                    n_events += 1
+                    continue
+                self._account_stream(h, h._action, out,
                                      comp.finished_at, comp.admitted_at,
                                      forced=h._forced)
                 n_events += 1
             self._sync_cache_stats()
+            self._processing = []
         return n_events
+
+    def _fail(self, exc: BaseException) -> None:
+        """The serving plane died (non-transient backend exception):
+        record the error and reject EVERYTHING in flight so no caller
+        blocks forever on a handle that can never complete."""
+        with self._lock:
+            if self._failed is None:
+                self._failed = exc
+            victims = (list(self._arrivals)
+                       + [h for _, h in self._retry_q]
+                       + list(self._in_flight.values())
+                       + [h for h in self._processing if not h.done()])
+            self._arrivals.clear()
+            self._retry_q = []
+            self._in_flight.clear()
+            self._processing = []
+        seen: set = set()
+        victims = [h for h in victims
+                   if not (id(h) in seen or seen.add(id(h)))]
+        now = self.clock()
+        for h in victims:
+            h.error = exc
+            # completed-but-errored, NOT accounted: the gateway's stats
+            # describe what it served, and it served nothing here
+            h._complete(self._fault_outcome(
+                h.request, h._action, f"gateway failed: {exc}"), now)
 
     def _account_stream(self, h: StreamHandle, a: int, out: ActionOutcome,
                         finished_t: float, first_token_t: float, *,
@@ -356,7 +513,14 @@ class AsyncGateway(Gateway):
 
         def loop():
             while not self._stop.is_set():
-                if self.pump() == 0:
+                try:
+                    n = self.pump()
+                except Exception:
+                    # pump already marked the gateway failed and
+                    # rejected every handle; a dead thread must not
+                    # keep "serving"
+                    return
+                if n == 0:
                     # nothing arrived and nothing finished: yield the
                     # GIL briefly rather than spinning
                     time.sleep(idle_sleep_s)
@@ -371,10 +535,16 @@ class AsyncGateway(Gateway):
         everything already submitted first."""
         if drain:
             deadline = time.monotonic() + timeout
-            while self.in_flight and time.monotonic() < deadline:
+            while (self.in_flight and self._failed is None
+                   and time.monotonic() < deadline):
                 if self._thread is None or not self._thread.is_alive():
-                    while self.in_flight and time.monotonic() < deadline:
-                        if self.pump() == 0:
+                    while (self.in_flight and self._failed is None
+                           and time.monotonic() < deadline):
+                        try:
+                            n = self.pump()
+                        except Exception:
+                            break      # handles already rejected
+                        if n == 0:
                             time.sleep(1e-3)
                     break
                 time.sleep(1e-3)
@@ -384,8 +554,11 @@ class AsyncGateway(Gateway):
             self._thread = None
 
     def drain_stream(self) -> GatewayStats:
-        """Pump (on the caller's thread) until nothing is in flight."""
-        while self.in_flight:
+        """Pump (on the caller's thread) until nothing is in flight.
+        Returns immediately once the gateway has failed — ``_fail``
+        rejects every outstanding handle, so there is nothing left to
+        drain (and nothing to hang on)."""
+        while self.in_flight and self._failed is None:
             if self.pump() == 0 and self.in_flight:
                 # work exists but didn't advance this tick (e.g. the
                 # engine is between chunks) — keep pumping

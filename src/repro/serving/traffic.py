@@ -165,6 +165,10 @@ class LoadReport:
     forced_refusals: int = 0
     depth_clamped: int = 0
     deadline_met: int = 0        # answered within their deadline
+    degraded: int = 0            # served on the fallback retriever
+    retries: int = 0             # transient-fault resubmissions
+    timed_out: int = 0           # cancelled mid-stream past deadline
+    faulted: int = 0             # transient failures after retry budget
     duration_s: float = 0.0      # arrival-span of the trace (virtual)
     latency: LatencyReservoir = field(
         default_factory=lambda: LatencyReservoir())
@@ -198,6 +202,8 @@ class LoadReport:
             "shed": self.shed, "forced_refusals": self.forced_refusals,
             "depth_clamped": self.depth_clamped,
             "deadline_met": self.deadline_met,
+            "degraded": self.degraded, "retries": self.retries,
+            "timed_out": self.timed_out, "faulted": self.faulted,
             "duration_s": round(self.duration_s, 4),
             "offered_rate": round(self.offered_rate, 3),
             "goodput": round(self.goodput, 3),
@@ -235,15 +241,23 @@ class LoadGenerator:
         self.trace = list(trace)
         if not self.trace:
             raise ValueError("empty trace")
+        # handles of the most recent run — benches read per-request
+        # detail (e.g. recovery time) the aggregate report drops
+        self.last_handles: List = []
 
     # -- shared bookkeeping -------------------------------------------
 
     def _report(self, handles) -> LoadReport:
+        self.last_handles = list(handles)
         rep = LoadReport(offered=len(handles),
                          duration_s=self.trace[-1].t)
         st = self.gateway.stats
         rep.forced_refusals = st.forced_refusals
         rep.depth_clamped = st.depth_clamped
+        rep.degraded = getattr(st, "degraded", 0)
+        rep.retries = getattr(st, "retries", 0)
+        rep.timed_out = getattr(st, "timed_out", 0)
+        rep.faulted = getattr(st, "faulted", 0)
         for h in handles:
             if not h.done():
                 continue

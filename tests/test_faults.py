@@ -1,0 +1,746 @@
+"""Fault-tolerant serving plane: deterministic chaos injection,
+circuit breakers, slot quarantine, deadline enforcement, and
+deadline-aware retries.
+
+Scheduler-level tests run the pure numpy FakeExecutor from
+test_host_scheduler through :class:`ChaosExecutor` seams; gateway-level
+tests use minimal scripted streaming backends.  Everything here is
+seeded/virtual-time deterministic — that's the point of the chaos
+machinery.  The real-executor NaN-detection test (JAX smoke model)
+lives at the bottom.
+"""
+import numpy as np
+import pytest
+
+from test_host_scheduler import FakeExecutor, arith_gen, expected, _prompts
+
+from repro.core.errors import (CircuitOpenError, FaultTimeoutError,
+                               TransientFaultError)
+from repro.retrieval.hybrid import (CircuitBreaker, IndexRetriever,
+                                    RetrievalCache, collect_breakers,
+                                    resolve_retrievers,
+                                    retrieve_with_fallback)
+from repro.routing import FixedPolicy, Request
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.faults import (ChaosInjector, FaultPlan, FaultSpec,
+                                  RetryPolicy)
+from repro.serving.streaming import AdmissionConfig, AsyncGateway
+from repro.serving.traffic import VirtualClock
+
+pytestmark = pytest.mark.chaos
+
+ZERO_STATE = lambda qs: np.zeros((len(qs), 1))
+
+
+# --- injector ---------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", kind="explode")
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", kind="raise", count=0)
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", kind="raise", prob=0.0)
+
+
+def test_injector_window_and_replay():
+    plan = FaultPlan(specs=(
+        FaultSpec(site="a", kind="raise", start=2, count=3),
+        FaultSpec(site="b", kind="raise", start=0, count=-1, prob=0.5),
+    ), seed=7)
+
+    def run():
+        inj = ChaosInjector(plan)
+        hits_a = [inj.fire("a") is not None for _ in range(8)]
+        hits_b = [inj.fire("b") is not None for _ in range(20)]
+        return hits_a, hits_b, [r[:3] for r in inj.fire_log]
+
+    ha, hb, log = run()
+    # window [2, 5) exactly
+    assert ha == [False, False, True, True, True, False, False, False]
+    # probabilistic spec fires a thinned subset, deterministically
+    assert 0 < sum(hb) < 20
+    assert run() == (ha, hb, log)       # same seed => same schedule
+
+
+def test_injector_unarmed_is_noop():
+    inj = ChaosInjector(FaultPlan())
+    assert not inj.armed
+    assert inj.fire("anything") is None
+    assert inj.fire_log == [] and inj.calls("anything") == 0
+
+
+def test_apply_error_kinds():
+    inj = ChaosInjector(FaultPlan(specs=(
+        FaultSpec(site="s", kind="raise"),)), sleep=lambda s: None)
+    with pytest.raises(TransientFaultError):
+        inj.apply_error_kind(FaultSpec(site="s", kind="raise"), "s")
+    with pytest.raises(FaultTimeoutError):
+        inj.apply_error_kind(FaultSpec(site="s", kind="timeout"), "s")
+    assert inj.apply_error_kind(
+        FaultSpec(site="s", kind="latency", latency_s=0.1), "s") is True
+    assert inj.apply_error_kind(
+        FaultSpec(site="s", kind="stall"), "s") is False
+
+
+# --- circuit breaker --------------------------------------------------------
+
+
+def test_breaker_state_machine():
+    b = CircuitBreaker(window=8, min_calls=4, failure_threshold=0.5,
+                       cooldown=3, half_open_probes=1)
+    for _ in range(4):
+        assert b.allow()
+        b.record_failure()
+    assert b.state == "open" and b.n_trips == 1
+    # cooldown - 1 = 2 denials; the 3rd attempted call is the probe
+    assert not b.allow() and not b.allow()
+    assert b.allow() and b.state == "half_open"
+    b.record_success()
+    assert b.state == "closed" and b.failure_rate() == 0.0
+    # probe FAILURE reopens instead
+    for _ in range(4):
+        b.record_failure()
+    assert b.state == "open"
+    assert not b.allow() and not b.allow() and b.allow()
+    b.record_failure()
+    assert b.state == "open" and b.n_trips == 3
+
+
+def test_breaker_window_evicts_old_failures():
+    b = CircuitBreaker(window=4, min_calls=4, failure_threshold=0.75)
+    for _ in range(3):
+        b.record_failure()
+    for _ in range(4):          # pushes the failures out of the window
+        b.record_success()
+    assert b.failure_rate() == 0.0 and b.state == "closed"
+
+
+def test_breaker_random_walk_invariants_deterministic():
+    """State-machine property test: under a seeded random call
+    sequence the breaker (a) only ever occupies its three states,
+    (b) never lets a call through while open pre-cooldown, and (c)
+    replays bit-identically."""
+
+    def walk(seed):
+        rng = np.random.default_rng(seed)
+        b = CircuitBreaker(window=8, min_calls=4, failure_threshold=0.5,
+                           cooldown=3)
+        trace = []
+        for _ in range(300):
+            allowed = b.allow()
+            if allowed:
+                (b.record_failure if rng.random() < 0.4
+                 else b.record_success)()
+            trace.append((allowed, b.state))
+            assert b.state in ("closed", "open", "half_open")
+            if not allowed:
+                assert b.state == "open" or b.state == "half_open"
+        return trace, b.n_trips, b.n_denied
+
+    t1 = walk(3)
+    assert t1 == walk(3)
+    assert t1[1] > 0            # the walk actually exercised trips
+
+
+# --- retriever seams: breaker + fallback + cache guard ----------------------
+
+
+class FlakyIndex:
+    """Index stub whose topk raises while ``broken``."""
+
+    def __init__(self, texts):
+        self.texts = texts
+        self.broken = False
+        self.calls = 0
+
+    def topk(self, query, k):
+        self.calls += 1
+        if self.broken:
+            raise TransientFaultError(f"flaky down ({query!r})")
+        ids = np.arange(min(k, len(self.texts)))
+        return ids, np.ones(len(ids), np.float32)
+
+
+def _suite(cache_size=8, **breaker_kw):
+    texts = [f"passage {i}" for i in range(6)]
+    flaky = FlakyIndex(texts)
+    retrievers = {"bm25": IndexRetriever("bm25", FlakyIndex(texts)),
+                  "dense": IndexRetriever("dense", flaky)}
+    wrapped, cache = resolve_retrievers(
+        retrievers, None, cache_size=cache_size,
+        breaker_kw=dict(window=4, min_calls=2, failure_threshold=0.5,
+                        cooldown=2, **breaker_kw))
+    return wrapped, cache, flaky
+
+
+def test_fallback_degrades_and_trips_breaker():
+    wrapped, cache, flaky = _suite()
+    flaky.broken = True
+    # min_calls=2, threshold 0.5: the second failure trips the breaker
+    for i in range(2):
+        ps, degraded = retrieve_with_fallback(wrapped, "dense",
+                                              f"q{i}", 2)
+        assert degraded and len(ps) == 2
+    brk = collect_breakers(wrapped)["dense"]
+    assert brk.state == "open" and brk.n_trips == 1
+    # while open (pre-cooldown) lookups degrade WITHOUT touching the
+    # dead service
+    calls_before = flaky.calls
+    _, degraded = retrieve_with_fallback(wrapped, "dense", "q-open", 2)
+    assert degraded and flaky.calls == calls_before
+    assert brk.n_denied >= 1
+
+
+def test_failed_lookup_never_cached_fallback_under_own_key():
+    """The cache-poisoning regression: a failed primary lookup must not
+    land in the cache under the primary's key, and the fallback result
+    is cached under the FALLBACK's key only."""
+    wrapped, cache, flaky = _suite()
+    flaky.broken = True
+    retrieve_with_fallback(wrapped, "dense", "q0", 2)
+    keys = list(cache._d)
+    assert all(k[1] != "dense" for k in keys), keys
+    assert any(k[1] == "bm25" for k in keys)
+    # recovery: the service heals and healthy results are cached under
+    # dense's own key again
+    flaky.broken = False
+    for i in range(8):
+        retrieve_with_fallback(wrapped, "dense", f"r{i}", 2)
+    assert collect_breakers(wrapped)["dense"].state == "closed"
+    ps, degraded = retrieve_with_fallback(wrapped, "dense", "fresh", 2)
+    assert not degraded
+    assert any(k[1] == "dense" for k in cache._d)
+
+
+def test_fallback_missing_or_self_raises_transient():
+    wrapped, _, flaky = _suite(cache_size=0)
+    flaky.broken = True
+    with pytest.raises(TransientFaultError):
+        retrieve_with_fallback(wrapped, "dense", "q", 2, fallback="dense")
+    with pytest.raises(TransientFaultError):
+        retrieve_with_fallback(wrapped, "dense", "q", 2, fallback="nope")
+
+
+def test_retrieval_cache_hits_bypass_open_breaker():
+    """A cached result stays servable while the breaker underneath is
+    open — the cache fronts the breaker by construction."""
+    wrapped, cache, flaky = _suite()
+    ps0 = wrapped["dense"].passages("warm", 2)      # healthy, cached
+    flaky.broken = True
+    for i in range(3):                               # trip the breaker
+        with pytest.raises(Exception):
+            wrapped["dense"].passages(f"cold{i}", 2)
+    assert collect_breakers(wrapped)["dense"].state == "open"
+    assert wrapped["dense"].passages("warm", 2) == ps0
+
+
+# --- scheduler: chaos seams, quarantine, watchdog, deadlines ---------------
+
+
+class FaultableFake(FakeExecutor):
+    """FakeExecutor + the optional health extensions the scheduler
+    drives (deactivate so cancelled slots actually stop)."""
+
+    def deactivate(self, slots):
+        for s in slots:
+            self._active[s] = False
+
+
+def chaos_engine(plan, gen_fn=arith_gen, *, clock=None, **kw):
+    inj = ChaosInjector(plan, clock=clock)
+    eng_kw = {k: kw.pop(k) for k in ("watchdog_syncs", "max_requeues")
+              if k in kw}
+    fake = FaultableFake(gen_fn, **kw)
+    return ContinuousEngine(executor=fake, chaos=inj, clock=clock,
+                            **eng_kw), fake, inj
+
+
+def test_nan_quarantine_peers_token_identical():
+    """A NaN-poisoned slot is quarantined and ONLY its request fails;
+    the surviving peers' tokens are bit-identical to a no-fault run."""
+    prompts = _prompts([3, 4, 5, 6])
+
+    def run(plan):
+        eng, fake, inj = chaos_engine(plan, num_slots=4, sync_every=2)
+        rids = [eng.reserve_rid() for _ in prompts]
+        for rid, p in zip(rids, prompts):
+            eng.submit(rid, p, 8)
+        done = eng.run()
+        return eng, [done[r] for r in rids]
+
+    plan = FaultPlan(specs=(FaultSpec(site="executor.decode", kind="nan",
+                                      start=1, count=1, slots=(2,)),))
+    eng, outs = run(plan)
+    _, clean = run(FaultPlan())
+    assert outs[2].failed and outs[2].transient
+    assert eng.stats.n_nan_trips == 1 and eng.stats.n_quarantined == 1
+    assert eng.quarantined_slots == {2}
+    for i in (0, 1, 3):
+        assert list(outs[i].tokens) == list(clean[i].tokens)
+
+
+def test_quarantined_slot_never_readmitted_until_reset():
+    plan = FaultPlan(specs=(FaultSpec(site="executor.decode", kind="nan",
+                                      start=0, count=1, slots=(0,)),))
+    eng, fake, inj = chaos_engine(plan, num_slots=2, sync_every=2)
+    outs = eng.generate_many(_prompts([3, 4, 5, 6]), max_new_tokens=8)
+    assert eng.quarantined_slots == {0}
+    # everything after the trip serves on slot 1 alone
+    assert all(not o.failed for o in outs[1:])
+    # more traffic: the quarantined slot stays out of the pool, so
+    # every admission after the trip sees at most one live request
+    eng.generate_many(_prompts([4, 4], seed=3), max_new_tokens=4)
+    assert eng.quarantined_slots == {0}
+    assert all(c <= 1 for c in list(eng.stats.concurrency_trace)[2:])
+    # reset returns it to service: two slots run concurrently again
+    assert eng.reset_quarantine() == [0]
+    assert eng.quarantined_slots == set()
+    eng.generate_many(_prompts([4, 4], seed=4), max_new_tokens=4)
+    assert list(eng.stats.concurrency_trace)[-1] == 2
+
+
+def test_watchdog_quarantines_stalled_slot():
+    plan = FaultPlan(specs=(FaultSpec(site="executor.decode",
+                                      kind="stall", start=0, count=-1),))
+    eng, fake, inj = chaos_engine(plan, num_slots=1, sync_every=2,
+                                  watchdog_syncs=3)
+    rid = eng.reserve_rid()
+    eng.submit(rid, _prompts([4])[0], 8)
+    done = eng.run()
+    assert done[rid].failed.startswith("watchdog")
+    assert done[rid].transient
+    assert eng.stats.n_watchdog_trips == 1
+
+
+def test_all_slots_quarantined_fails_queue_not_hangs():
+    """The deadlock guard: with every slot quarantined, queued work is
+    failed transiently instead of spinning run() forever."""
+    plan = FaultPlan(specs=(FaultSpec(site="executor.decode",
+                                      kind="stall", start=0, count=-1),))
+    eng, fake, inj = chaos_engine(plan, num_slots=1, sync_every=2,
+                                  watchdog_syncs=2)
+    r0, r1 = eng.reserve_rid(), eng.reserve_rid()
+    eng.submit(r0, _prompts([4])[0], 8)
+    eng.submit(r1, _prompts([5])[0], 8)
+    done = eng.run()                      # must terminate
+    assert done[r0].failed.startswith("watchdog")
+    assert done[r1].failed == "all slots quarantined"
+    assert done[r1].transient
+
+
+def test_decode_fault_requeues_then_succeeds():
+    plan = FaultPlan(specs=(FaultSpec(site="executor.decode",
+                                      kind="raise", start=0, count=1),))
+    eng, fake, inj = chaos_engine(plan, num_slots=2, sync_every=2,
+                                  max_requeues=1)
+    prompts = _prompts([4, 5])
+    outs = eng.generate_many(prompts, max_new_tokens=8)
+    assert eng.stats.n_exec_faults == 1 and eng.stats.n_requeued == 2
+    for p, o in zip(prompts, outs):
+        assert not o.failed
+        assert list(o.tokens) == expected(arith_gen(p), 8)
+
+
+def test_decode_fault_without_requeue_fails_transient():
+    plan = FaultPlan(specs=(FaultSpec(site="executor.decode",
+                                      kind="raise", start=0, count=1),))
+    eng, fake, inj = chaos_engine(plan, num_slots=2, sync_every=2)
+    outs = eng.generate_many(_prompts([4]), max_new_tokens=8)
+    assert outs[0].failed and outs[0].transient
+
+
+def test_admit_fault_requeues_and_stream_survives():
+    plan = FaultPlan(specs=(FaultSpec(site="executor.admit",
+                                      kind="raise", start=0, count=1),))
+    eng, fake, inj = chaos_engine(plan, num_slots=2, sync_every=2,
+                                  max_requeues=1)
+    prompts = _prompts([4, 5, 6])
+    outs = eng.generate_many(prompts, max_new_tokens=6)
+    assert eng.stats.n_exec_faults == 1
+    for p, o in zip(prompts, outs):
+        assert not o.failed, o
+        assert list(o.tokens) == expected(arith_gen(p), 6)
+
+
+def test_random_chaos_every_request_resolves():
+    """Liveness property: under seeded random fault plans every
+    submitted request reaches a terminal state (served, transient,
+    timed out...) — run() always returns with a full result set."""
+    rng = np.random.default_rng(0)
+    sites = ["executor.decode", "executor.admit"]
+    kinds = ["raise", "stall", "nan"]
+    for trial in range(6):
+        specs = tuple(
+            FaultSpec(site=sites[int(rng.integers(len(sites)))],
+                      kind=(k := kinds[int(rng.integers(len(kinds)))]),
+                      start=int(rng.integers(0, 4)),
+                      count=int(rng.integers(1, 3)),
+                      slots=(0,) if k == "nan" else None)
+            for _ in range(int(rng.integers(1, 3))))
+        # nan/stall only make sense at the decode site
+        specs = tuple(s if s.kind == "raise"
+                      else FaultSpec(site="executor.decode", kind=s.kind,
+                                     start=s.start, count=s.count,
+                                     slots=s.slots)
+                      for s in specs)
+        eng, fake, inj = chaos_engine(
+            FaultPlan(specs=specs, seed=trial), num_slots=2,
+            sync_every=2, watchdog_syncs=2, max_requeues=1)
+        prompts = _prompts([3, 4, 5, 6, 4], seed=trial)
+        rids = [eng.reserve_rid() for _ in prompts]
+        for rid, p in zip(rids, prompts):
+            eng.submit(rid, p, 6)
+        done = eng.run()
+        assert set(done) == set(rids), (trial, specs)
+
+
+def test_deadline_cancels_resident_mid_stream():
+    t = [0.0]
+    eng, fake, _ = chaos_engine(FaultPlan(), clock=lambda: t[0],
+                                num_slots=2, sync_every=2)
+    r0, r1 = eng.reserve_rid(), eng.reserve_rid()
+    p0, p1 = _prompts([4, 5])
+    eng.submit(r0, p0, 16, deadline_at=0.5)   # will expire mid-decode
+    eng.submit(r1, p1, 4)                     # no deadline
+    done = {}
+    for _ in range(64):
+        if not eng.has_work:
+            break
+        done.update(eng.poll())
+        t[0] += 0.2                           # 3 polls pass the deadline
+    done.update(eng.poll())
+    assert done[r0].timed_out and done[r0].failed == "deadline exceeded"
+    assert not done[r0].transient
+    assert not done[r1].failed
+    assert list(done[r1].tokens) == expected(arith_gen(p1), 4)
+    assert eng.stats.n_timed_out == 1
+    # the freed slot serves new work
+    out = eng.generate_many([_prompts([3])[0]], max_new_tokens=2)
+    assert not out[0].failed
+
+
+def test_deadline_expires_queued_request():
+    t = [0.0]
+    eng, fake, _ = chaos_engine(FaultPlan(), clock=lambda: t[0],
+                                num_slots=1, sync_every=2)
+    r0, r1 = eng.reserve_rid(), eng.reserve_rid()
+    p0, p1 = _prompts([4, 5])
+    eng.submit(r0, p0, 8)
+    eng.submit(r1, p1, 8, deadline_at=0.1)    # dies waiting for the slot
+    t[0] = 0.2
+    done = eng.run()
+    assert not done[r0].failed
+    assert done[r1].timed_out
+    assert eng.stats.n_timed_out == 1
+
+
+# --- AsyncGateway: retries, deadline-awareness, fatal-error hardening -------
+
+
+class ScriptedStreamBackend:
+    """Minimal streaming backend: stream_submit consumes a script of
+    "ok" / "transient" / "boom" / "pend" entries; "ok" completes
+    immediately, "pend" parks the request in flight forever."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.calls = 0
+        self.poll_raise = False
+
+    stream_backlog = 0
+
+    def execute_batch(self, questions, action):
+        raise NotImplementedError
+
+    def stream_submit(self, question, action, *, deadline_at=0.0):
+        self.calls += 1
+        step = self.script.pop(0) if self.script else "ok"
+        if step == "transient":
+            raise TransientFaultError("scripted transient")
+        if step == "boom":
+            raise RuntimeError("scripted fatal")
+        if step == "pend":
+            return self.calls, None
+        from repro.serving.pipeline import ActionOutcome
+        return None, ActionOutcome(
+            qid=question.qid, action=action.idx, correct=True,
+            refused=False, hallucinated=False, cost_tokens=1.0,
+            hit=True, answerable=True, answer="ok")
+
+    def stream_poll(self):
+        if self.poll_raise:
+            raise RuntimeError("poll blew up")
+        return []
+
+
+def _mk_request(qid=0, deadline_ms=0.0):
+    from repro.data.synthetic_squad import Question
+    q = Question(qid=qid, text=f"q{qid}", answerable=True,
+                 gold_answer="a", gold_pid=0)
+    return Request(qid=qid, question=q, slo="quality_first",
+                   deadline_ms=deadline_ms)
+
+
+def _mk_gateway(backend, clock, **kw):
+    kw.setdefault("retry", RetryPolicy(max_retries=1, backoff_s=0.05))
+    return AsyncGateway(FixedPolicy(1), backend, state_fn=ZERO_STATE,
+                        clock=clock.now, **kw)
+
+
+def test_stream_retry_transient_then_success():
+    clock = VirtualClock()
+    be = ScriptedStreamBackend(["transient", "ok"])
+    gw = _mk_gateway(be, clock)
+    h = gw.submit_stream(_mk_request())
+    gw.pump()                       # submit fails -> retry scheduled
+    assert not h.done() and gw.in_flight == 1
+    clock.advance(0.06)
+    gw.pump()                       # backoff elapsed -> resubmitted
+    assert h.done() and h.result().answer == "ok"
+    assert h.retries == 1
+    assert gw.stats.retries == 1 and gw.stats.faulted == 0
+
+
+def test_stream_retry_exhausted_counts_faulted():
+    clock = VirtualClock()
+    be = ScriptedStreamBackend(["transient", "transient"])
+    gw = _mk_gateway(be, clock)
+    h = gw.submit_stream(_mk_request())
+    gw.pump()
+    clock.advance(0.06)
+    gw.pump()
+    assert h.done() and h.outcome.transient and h.outcome.refused
+    assert gw.stats.retries == 1 and gw.stats.faulted == 1
+
+
+def test_stream_retry_never_past_deadline():
+    """A retry whose backoff alone would land past the request's
+    deadline is not scheduled — the request fails immediately."""
+    clock = VirtualClock()
+    be = ScriptedStreamBackend(["transient", "ok"])
+    gw = _mk_gateway(be, clock,
+                     retry=RetryPolicy(max_retries=3, backoff_s=0.2))
+    h = gw.submit_stream(_mk_request(deadline_ms=100.0))  # < backoff
+    gw.pump()
+    assert h.done() and h.outcome.transient
+    assert gw.stats.retries == 0 and gw.stats.faulted == 1
+    assert be.calls == 1
+
+
+def test_async_gateway_submit_exception_fails_everything():
+    """The silent-hang regression: a non-transient backend exception
+    must reject every in-flight handle (result() raises, done() true)
+    and make drain_stream return instead of spinning."""
+    clock = VirtualClock()
+    be = ScriptedStreamBackend(["boom"])
+    gw = _mk_gateway(be, clock)
+    h0 = gw.submit_stream(_mk_request(0))
+    h1 = gw.submit_stream(_mk_request(1))
+    with pytest.raises(RuntimeError, match="scripted fatal"):
+        gw.pump()
+    assert isinstance(gw.failed, RuntimeError)
+    assert h0.done() and h1.done()
+    for h in (h0, h1):
+        with pytest.raises(RuntimeError, match="scripted fatal"):
+            h.result(timeout=0)
+    assert gw.in_flight == 0
+    gw.drain_stream()               # returns immediately, no hang
+    # post-mortem submissions are rejected immediately too
+    h2 = gw.submit_stream(_mk_request(2))
+    assert h2.done() and h2.error is gw.failed
+
+
+def test_async_gateway_thread_death_stops_cleanly():
+    """Background-thread variant: the serving thread dies on a poll
+    exception; stop() must return, handles must be rejected."""
+    import time as _time
+    be = ScriptedStreamBackend(["pend"])     # stays in flight until
+    be.poll_raise = True                     # the poll explosion
+    gw = AsyncGateway(FixedPolicy(1), be, state_fn=ZERO_STATE)
+    gw.start(idle_sleep_s=1e-4)
+    h = gw.submit_stream(_mk_request())
+    deadline = _time.monotonic() + 5.0
+    while not h.done() and _time.monotonic() < deadline:
+        _time.sleep(1e-3)
+    gw.stop(timeout=5.0)            # must not block on the dead thread
+    assert h.done()
+    with pytest.raises(RuntimeError, match="poll blew up"):
+        h.result(timeout=0)
+    assert gw.failed is not None
+
+
+def test_no_fault_parity_features_on_vs_off_simulator():
+    """No-fault parity: with no faults armed, retries-enabled vs
+    retries-disabled gateways produce identical outcomes and stats
+    over the simulator service model."""
+    from repro.core.config import RouterConfig, TestbedConfig
+    from repro.core.offline_log import build_testbed
+    from repro.routing import SimulatorBackend
+    from repro.serving.traffic import (LoadGenerator, PoissonProcess,
+                                       build_trace)
+
+    cfg = TestbedConfig(n_train=20, n_eval=8, n_paragraphs=40,
+                        router=RouterConfig(n_epochs=1))
+    data, index, pipe, *_ = build_testbed(cfg)
+
+    trace_qs = data.questions[:8]
+
+    def run(retry):
+        clock = VirtualClock()
+        be = SimulatorBackend(pipe, stream_slots=4, service_polls=2,
+                              clock=clock.now)
+        gw = AsyncGateway(FixedPolicy(2), be, state_fn=ZERO_STATE,
+                          clock=clock.now, deadline_ms=300.0,
+                          retry=retry)
+        trace = build_trace(trace_qs, PoissonProcess(80.0, seed=0), 32,
+                            deadline_ms=300.0)
+        gen = LoadGenerator(gw, trace)
+        rep = gen.run_virtual(clock)
+        outcomes = [(h.outcome.answer, h.outcome.correct,
+                     h.outcome.refused, h.shed, h.latency_ms)
+                    for h in gen.last_handles]
+        return rep.as_dict(), outcomes, gw.stats.served, gw.stats.shed
+
+    on = run(RetryPolicy(max_retries=2))
+    off = run(None)
+    assert on == off
+    assert on[0]["degraded"] == 0 and on[0]["retries"] == 0
+    assert on[0]["faulted"] == 0 and on[2] > 0
+
+
+# --- real executor: device-side NaN detection -------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_real_executor_nan_detection_quarantines(smoke_model):
+    """NaN params poison the decode logits; the executor's on-device
+    detector must flag the slots and the scheduler must quarantine them
+    (requests fail transiently, nothing hangs)."""
+    import jax
+
+    model, params = smoke_model
+    bad_params = jax.tree_util.tree_map(lambda x: x * np.nan, params)
+    eng = ContinuousEngine(model, bad_params, num_slots=2, max_len=32,
+                           max_new_cap=8, sync_every=2)
+    rids = [eng.reserve_rid() for _ in range(2)]
+    for rid in rids:
+        eng.submit(rid, [5, 6, 7], 8)
+    done = eng.run()
+    assert set(done) == set(rids)
+    assert all(done[r].failed and done[r].transient for r in rids)
+    assert eng.stats.n_nan_trips == 2
+    assert eng.quarantined_slots == {0, 1}
+
+
+def test_real_executor_health_checks_off_no_quarantine(smoke_model):
+    """health_checks=False disables the detector: NaN logits decode to
+    garbage but nothing is quarantined (the parity escape hatch)."""
+    import jax
+
+    from repro.serving.executor import SingleDeviceExecutor
+
+    model, params = smoke_model
+    bad_params = jax.tree_util.tree_map(lambda x: x * np.nan, params)
+    ex = SingleDeviceExecutor(model, bad_params, num_slots=2, max_len=32,
+                              max_new_cap=8, sync_every=2,
+                              health_checks=False)
+    eng = ContinuousEngine(executor=ex)
+    outs = eng.generate_many([[5, 6, 7]], max_new_tokens=4)
+    assert not outs[0].failed
+    assert eng.stats.n_nan_trips == 0 and eng.quarantined_slots == set()
+
+
+def test_real_executor_healthy_run_parity_with_health_checks(smoke_model):
+    """On a healthy model the NaN detector must be a pure observer:
+    greedy tokens with health_checks on == off, bit for bit."""
+    from repro.serving.executor import SingleDeviceExecutor
+
+    model, params = smoke_model
+    prompts = [[5, 6, 7], [9, 4, 11, 2]]
+
+    def run(flag):
+        ex = SingleDeviceExecutor(model, params, num_slots=2, max_len=32,
+                                  max_new_cap=8, sync_every=2,
+                                  health_checks=flag)
+        eng = ContinuousEngine(executor=ex)
+        return [list(o.tokens)
+                for o in eng.generate_many(prompts, max_new_tokens=6)]
+
+    assert run(True) == run(False)
+
+
+def test_no_fault_parity_continuous_backend(smoke_model):
+    """Acceptance: with no FaultPlan armed, the hardened open-loop
+    stack over the REAL continuous engine (health checks on, breakers
+    armed, retry policy installed) is outcome- and report-identical to
+    a features-off run (health_checks=False executor, retry=None)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.config import RetrievalConfig
+    from repro.data.synthetic_squad import SyntheticSquad
+    from repro.data.tokenizer import HashTokenizer
+    from repro.retrieval.bm25 import BM25Index
+    from repro.routing import FixedPolicy
+    from repro.routing.engine_backend import ContinuousEngineBackend
+    from repro.serving.executor import SingleDeviceExecutor
+    from repro.serving.streaming import AsyncGateway
+    from repro.serving.traffic import (LoadGenerator, PoissonProcess,
+                                       VirtualClock, build_trace)
+
+    model, params = smoke_model
+    mcfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                               dtype="float32")
+    data = SyntheticSquad(n_paragraphs=40, n_questions=8, seed=0)
+    index = BM25Index.build([p.text for p in data.paragraphs],
+                            RetrievalConfig(vocab_hash_dim=1024))
+
+    def run(hardened):
+        clock = VirtualClock()
+        executor = None
+        if not hardened:
+            executor = SingleDeviceExecutor(
+                model, params, num_slots=2, max_len=48 + 4,
+                max_new_cap=4, sync_every=2, prefill_batch=2,
+                health_checks=False)
+        backend = ContinuousEngineBackend.create(
+            model, params, HashTokenizer(mcfg.vocab_size), index,
+            executor=executor, num_slots=2, max_prompt_len=48,
+            max_new_tokens=4, sync_every=2, clock=clock.now)
+        gw = AsyncGateway(
+            FixedPolicy(2), backend,
+            state_fn=lambda qs: np.zeros((len(qs), 1)),
+            clock=clock.now, deadline_ms=500.0,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.02)
+            if hardened else None)
+        trace = build_trace(data.questions, PoissonProcess(60.0, seed=0),
+                            12, deadline_ms=500.0)
+        gen = LoadGenerator(gw, trace)
+        rep = gen.run_virtual(clock, service_quantum_s=0.01)
+        outs = [(h.outcome.answer, h.outcome.correct, h.outcome.refused,
+                 getattr(h.outcome, "degraded", False), h.shed)
+                for h in gen.last_handles]
+        return rep.as_dict(), outs
+
+    rep_on, outs_on = run(True)
+    rep_off, outs_off = run(False)
+    assert outs_on == outs_off
+    assert rep_on == rep_off
+    assert rep_on["degraded"] == rep_on["retries"] == rep_on["faulted"] == 0
