@@ -73,6 +73,29 @@ def main() -> dict:
         "shape": f"S{S}xL{L}xH{H}xD{D}",
         "vmem_tile_bytes": (D + 2 * 128 * D + D + 2) * 4}
 
+    # paged flash decode: the same KV content laid out as a page pool +
+    # block table, at several page sizes, vs the dense kernel above
+    from repro.kernels import paged_flash_decode
+    dense_out = flash_decode(q, kc, vc, lens)
+    for ps in (16, 32, 64):
+        MB = L // ps
+        NPg = S * MB
+        kp = kc.reshape(NPg, ps, Hkv, D)
+        vp = vc.reshape(NPg, ps, Hkv, D)
+        table = jnp.arange(NPg, dtype=jnp.int32).reshape(S, MB)
+        t_paged = _time(lambda: paged_flash_decode(q, kp, vp, table, lens))
+        paged_out = paged_flash_decode(q, kp, vp, table, lens)
+        out[f"paged_flash_decode_ps{ps}"] = {
+            "us_pallas_interp": round(t_paged, 1),
+            "us_dense_pallas_interp": round(t_fd, 1),
+            "page_size": ps, "num_pages": NPg,
+            "shape": f"S{S}xL{L}xH{H}xD{D}",
+            "matches_dense": bool(jnp.allclose(dense_out, paged_out,
+                                               rtol=1e-5, atol=1e-5)),
+            # per-tile VMEM: one query row + one K page + one V page +
+            # accumulator + (m, l) running stats
+            "vmem_tile_bytes": (D + 2 * ps * D + D + 2) * 4}
+
     save_artifact("kernels_bench", out)
     for k, v in out.items():
         print(k, v)

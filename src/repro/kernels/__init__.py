@@ -9,7 +9,8 @@
 * ``ref.py``             — pure-jnp oracles for the allclose sweeps.
 """
 from repro.kernels.ops import (bm25_scores, dense_topk, flash_attention,
-                               flash_decode, ssd_chunk_scan)
+                               flash_decode, paged_flash_decode,
+                               ssd_chunk_scan)
 
 __all__ = ["bm25_scores", "dense_topk", "flash_attention", "flash_decode",
-           "ssd_chunk_scan"]
+           "paged_flash_decode", "ssd_chunk_scan"]

@@ -69,6 +69,72 @@ def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
                     ).astype(o_ref.dtype)
 
 
+def _paged_flash_decode_kernel(tab_ref, q_ref, k_ref, v_ref, len_ref,
+                               o_ref, m_scr, l_scr, acc_scr, *,
+                               scale: float, block_kv: int, n_kv: int):
+    # tab_ref is the scalar-prefetched block table — already consumed by
+    # the k/v index maps (they gather the page for grid step ki), so the
+    # body is exactly the dense online-softmax reduction over one page.
+    del tab_ref
+    _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                         m_scr, l_scr, acc_scr, scale=scale,
+                         block_kv=block_kv, n_kv=n_kv)
+
+
+def paged_flash_decode_pallas(q, k_pages, v_pages, table, lengths, *,
+                              interpret: bool = False):
+    """Split-KV decode attention through a per-slot block table.
+
+    q: (B, H, D); k/v_pages: (num_pages, Hkv, page_size, D[v]) —
+    kv-head-major page pools; table: (B, max_blocks) int32 page ids
+    (entries past the slot's allocation may point anywhere valid — the
+    length mask kills them); lengths: (B,) valid kv length (>= 1).
+
+    The grid is (B, H, max_blocks) with the page axis innermost; the
+    table rides as a scalar-prefetch operand so the k/v BlockSpec index
+    maps resolve ``table[b, ki]`` *before* the tile fetch — the kernel
+    gathers pages straight out of the pool, never materializing a
+    contiguous (B, L) cache row.  GQA stays in the index map
+    (``h // G``), masking/online-softmax are identical to the dense
+    kernel.  Returns (B, H, Dv).
+    """
+    B, H, D = q.shape
+    Hkv, ps = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[3]
+    G = H // Hkv
+    n_kv = table.shape[1]
+    grid = (B, H, n_kv)
+    scale = 1.0 / (D ** 0.5)
+    lens = lengths.reshape(B, 1).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_paged_flash_decode_kernel, scale=scale,
+                          block_kv=ps, n_kv=n_kv),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, D), lambda b, h, ki, tab: (b, h, 0)),
+                pl.BlockSpec((1, 1, ps, D),
+                             lambda b, h, ki, tab: (tab[b, ki], h // G,
+                                                    0, 0)),
+                pl.BlockSpec((1, 1, ps, Dv),
+                             lambda b, h, ki, tab: (tab[b, ki], h // G,
+                                                    0, 0)),
+                pl.BlockSpec((1, 1), lambda b, h, ki, tab: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Dv),
+                                   lambda b, h, ki, tab: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),      # running max
+                pltpu.VMEM((1, 1), jnp.float32),      # running denom
+                pltpu.VMEM((1, Dv), jnp.float32),     # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dv), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q, k_pages, v_pages, lens)
+
+
 def flash_decode_pallas(q, k, v, lengths, *, block_kv: int = 128,
                         interpret: bool = False):
     """q: (B, H, D); k/v: (B, Hkv, L, D[v]) — kv-head-major so a q head

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.kernels.bm25 import bm25_pallas
 from repro.kernels.dense_topk import _dense_topk_padded
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode import (flash_decode_pallas,
+                                        paged_flash_decode_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -120,6 +121,27 @@ def flash_decode(q, k, v, lengths, *, block_kv: int = 128):
         vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
     return flash_decode_pallas(q, kf, vf, jnp.maximum(lengths, 1),
                                block_kv=bk, interpret=_interpret())
+
+
+@jax.jit
+def paged_flash_decode(q, k_pages, v_pages, table, lengths):
+    """Single-query GQA attention through a paged KV cache.
+
+    q: (B, H, D) — one query per slot; k/v_pages: (num_pages,
+    page_size, Hkv, D[v]) — the executor's global page pools; table:
+    (B, max_blocks) int32 page ids per slot; lengths: (B,) valid kv
+    length (>= 1).  Returns (B, H, Dv).  Pools transpose to
+    kv-head-major (page-local — never gathered to a contiguous row on
+    the host side); table entries clamp into range so unallocated tail
+    blocks read a valid page and are masked by the length check.
+    """
+    NP = k_pages.shape[0]
+    kf = k_pages.transpose(0, 2, 1, 3)            # (NP, Hkv, ps, D)
+    vf = v_pages.transpose(0, 2, 1, 3)
+    tab = jnp.clip(table.astype(jnp.int32), 0, NP - 1)
+    return paged_flash_decode_pallas(q, kf, vf, tab,
+                                     jnp.maximum(lengths, 1),
+                                     interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -58,6 +58,30 @@ def flash_decode_ref(q, k, v, lengths):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_flash_decode_ref(q, k_pages, v_pages, table, lengths):
+    """Oracle for the paged decode kernel: gather the table's pages into
+    a contiguous cache row, then run the dense decode oracle.
+
+    q: (B, H, D); k/v_pages: (num_pages, page_size, Hkv, D[v]) — the
+    executor's page-pool layout; table: (B, max_blocks) int32;
+    lengths: (B,).  Returns (B, H, Dv).  The gather materializes the
+    (B, max_blocks * page_size) row the kernel must not.
+    """
+    B, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    G = H // Hkv
+    k = k_pages[table].reshape(B, -1, Hkv, D)
+    v = v_pages[table].reshape(B, -1, Hkv, Dv)
+    kx = (jnp.repeat(k, G, axis=2) if G > 1 else k)
+    vx = (jnp.repeat(v, G, axis=2) if G > 1 else v)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * H, -1, Dv)
+    lens = jnp.repeat(lengths, H)
+    return flash_decode_ref(q.reshape(B * H, D), kf, vf,
+                            lens).reshape(B, H, Dv)
+
+
 def ssd_scan_ref(xdt, B_, C_, da):
     """Sequential SSD recurrence — the semantic ground truth.
 

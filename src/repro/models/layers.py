@@ -149,7 +149,7 @@ def gqa_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 
 
 def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
-              causal=True, cross_kv=None, ring=False):
+              causal=True, cross_kv=None, ring=False, page_table=None):
     """x: (B, S, d). cache: {"k","v"} or None.  positions: (B, S).
 
     The valid cache length is derived from positions: after inserting
@@ -162,6 +162,14 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
     absolute-position rope phases, so relative attention is exact; all
     resident entries are within the window by construction, hence the
     score mask reduces to "slot filled".
+
+    ``page_table`` (B, max_blocks) int32 switches decode (S == 1) to a
+    *paged* cache: the cache leaves are global page pools of shape
+    (num_pages, page_size, Hkv, Dh[v]) and logical block ``i`` of row
+    ``b`` lives in pool page ``page_table[b, i]``.  Prefill (S > 1)
+    never sees a table — it runs on a dense scratch cache, writing at
+    the absolute ``positions`` (which may start past 0 when a shared
+    prefix is already resident in the scratch).
     """
     B, S, d = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -217,6 +225,56 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
             ck = ck.at[bidx[:, None], slots].set(k[:, -span:].astype(ck.dtype))
             cv = cv.at[bidx[:, None], slots].set(v[:, -span:].astype(cv.dtype))
         new_cache = {"k": ck, "v": cv}
+    elif page_table is not None:
+        # paged decode (S == 1): write this step's k/v into the page
+        # holding `pos`, read back through the block table.  Idle slots
+        # carry an out-of-range sentinel position, so their write drops
+        # — their pages may already belong to a newly admitted request.
+        pool_k = cache["k_q"] if "k_q" in cache else cache["k"]
+        NP, ps = pool_k.shape[0], pool_k.shape[1]
+        MB = page_table.shape[1]
+        bidx = jnp.arange(B)
+        pos = positions[:, 0]
+        blk = pos // ps
+        off = pos % ps
+        page = jnp.where(blk < MB,
+                         page_table[bidx, jnp.minimum(blk, MB - 1)], NP)
+        if "k_q" in cache:
+            from repro.serving import kv_quant as KQ
+            kq, ks = KQ.quantize(k[:, 0])
+            vq, vs = KQ.quantize(v[:, 0])
+            new_cache = {
+                "k_q": cache["k_q"].at[page, off].set(kq, mode="drop"),
+                "v_q": cache["v_q"].at[page, off].set(vq, mode="drop"),
+                "k_s": cache["k_s"].at[page, off].set(ks, mode="drop"),
+                "v_s": cache["v_s"].at[page, off].set(vs, mode="drop"),
+            }
+            pk, pv = KQ.read(new_cache, dtype=v.dtype)
+        else:
+            pk = cache["k"].at[page, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            pv = cache["v"].at[page, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": pk, "v": pv}
+        kv_len = pos + 1
+        if (cfg.use_flash_decode and causal and not window
+                and not cfg.attn_logit_softcap):
+            from repro.kernels.ops import paged_flash_decode as _pfd
+            out = _pfd(q[:, 0], pk, pv, page_table, kv_len)[:, None]
+            out = out.astype(v.dtype)
+        else:
+            # reference read: gather every block except the last (the
+            # executor's write-overflow block — reads never need it)
+            # into a contiguous (B, max_len) row, so the softmax
+            # reduction length matches the dense path exactly and
+            # greedy decode stays bit-identical to the dense cache
+            tbl = page_table[:, :MB - 1] if MB > 1 else page_table
+            ck = pk[tbl].reshape(B, -1, *pk.shape[2:])
+            cv = pv[tbl].reshape(B, -1, *pv.shape[2:])
+            out = attention(q, ck, cv, q_pos=positions, kv_len=kv_len,
+                            causal=causal, window=window,
+                            softcap=cfg.attn_logit_softcap,
+                            q_chunk=cfg.attn_q_chunk)
     elif "k_q" in cache:
         # int8-quantized slot cache (cfg.kv_quant_int8): insert this
         # step's k/v quantized, attend over the dequantized views.  The
@@ -225,15 +283,16 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
         from repro.serving import kv_quant as KQ
         if S == 1:  # decode: quantize one step, scatter at per-slot pos
             new_cache = KQ.insert_step(cache, k, v, positions[:, 0])
-        else:       # prefill into an empty cache (positions 0..S-1)
+        else:       # prefill at absolute positions (a suffix prefill
+            # starts past 0 when a shared prefix is already resident)
             kq, ks = KQ.quantize(k)
             vq, vs = KQ.quantize(v)
-            z4 = (0, 0, 0, 0)
+            bidx = jnp.arange(B)
             new_cache = {
-                "k_q": jax.lax.dynamic_update_slice(cache["k_q"], kq, z4),
-                "v_q": jax.lax.dynamic_update_slice(cache["v_q"], vq, z4),
-                "k_s": jax.lax.dynamic_update_slice(cache["k_s"], ks, z4),
-                "v_s": jax.lax.dynamic_update_slice(cache["v_s"], vs, z4),
+                "k_q": cache["k_q"].at[bidx[:, None], positions].set(kq),
+                "v_q": cache["v_q"].at[bidx[:, None], positions].set(vq),
+                "k_s": cache["k_s"].at[bidx[:, None], positions].set(ks),
+                "v_s": cache["v_s"].at[bidx[:, None], positions].set(vs),
             }
         ck, cv = KQ.read(new_cache, dtype=v.dtype)
         kv_len = positions[:, -1] + 1
@@ -253,9 +312,10 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None, window=0,
         if S == 1:  # decode: scatter at per-request positions
             ck = ck.at[bidx, positions[:, 0]].set(k[:, 0].astype(ck.dtype))
             cv = cv.at[bidx, positions[:, 0]].set(v[:, 0].astype(cv.dtype))
-        else:  # prefill into an empty cache (positions 0..S-1)
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        else:  # prefill at absolute positions (a suffix prefill starts
+            # past 0 when a shared prefix is already resident)
+            ck = ck.at[bidx[:, None], positions].set(k.astype(ck.dtype))
+            cv = cv.at[bidx[:, None], positions].set(v.astype(cv.dtype))
         kv_len = positions[:, -1] + 1
         if (S == 1 and cfg.use_flash_decode and causal and not window
                 and not cfg.attn_logit_softcap):

@@ -32,6 +32,18 @@ class Model:
         return init_from_schema(jax.random.PRNGKey(0),
                                 self.cache_schema(batch, max_len))
 
+    def paged_cache_schema(self, num_slots: int, num_pages: int,
+                           page_size: int, max_blocks: int):
+        return T.paged_cache_schema(self.cfg, num_slots, num_pages,
+                                    page_size, max_blocks)
+
+    def init_paged_cache(self, num_slots: int, num_pages: int,
+                         page_size: int, max_blocks: int):
+        return init_from_schema(
+            jax.random.PRNGKey(0),
+            self.paged_cache_schema(num_slots, num_pages, page_size,
+                                    max_blocks))
+
     # forward passes --------------------------------------------------
     def train_logits(self, params, inputs, *, moe_fn: Optional[Callable] = None):
         return T.forward_train(params, self.cfg, inputs, moe_fn=moe_fn)

@@ -89,7 +89,8 @@ def _layer_schema(cfg: ModelConfig, s: LayerSig) -> Dict[str, Any]:
 
 
 def apply_layer(p, x, cfg: ModelConfig, s: LayerSig, *, positions,
-                cache=None, enc_out=None, moe_fn=None, mla_absorb=False):
+                cache=None, enc_out=None, moe_fn=None, mla_absorb=False,
+                page_table=None):
     """One residual block.  Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = dict(cache) if cache is not None else None
@@ -116,7 +117,8 @@ def apply_layer(p, x, cfg: ModelConfig, s: LayerSig, *, positions,
             sub = {"k": cache["k"], "v": cache["v"]}
         out, nc = L.gqa_apply(p["attn"], h, cfg, positions=positions,
                               cache=sub, window=s.window, causal=s.causal,
-                              ring=bool(cfg.window_ring_cache and s.window))
+                              ring=bool(cfg.window_ring_cache and s.window),
+                              page_table=page_table)
         if nc is not None:
             new_cache.update(nc)
     x = x + out
@@ -251,6 +253,40 @@ def init_cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, A
              for j, s in enumerate(block)}, n_blocks),
     }
     return cache
+
+
+def paged_cache_schema(cfg: ModelConfig, num_slots: int, num_pages: int,
+                       page_size: int, max_blocks: int) -> Dict[str, Any]:
+    """Paged decode-cache ShapeSpec tree (vLLM-style block pool).
+
+    Per layer: a global pool of ``num_pages`` K/V pages of ``page_size``
+    positions, reused by :func:`_layer_cache_schema` with
+    ``batch=num_pages, max_len=page_size`` — so the page dim carries the
+    ``batch`` logical axis (pages shard with the slots on ``data``) and
+    kv-head dims keep riding ``model``, int8 quant included.  On top: a
+    per-slot ``table`` (num_slots, max_blocks) int32 shared across
+    layers, and the usual per-slot ``pos``.  Only full-attention GQA
+    stacks page (no SSM/MLA/cross state, no ring buffers): their cache
+    rows are not position-addressed pools.
+    """
+    prefix, block, n_blocks = layer_structure(cfg)
+    for s in prefix + block:
+        if (s.kind != "A" or s.cross or cfg.attn_type == "mla"
+                or (cfg.window_ring_cache and s.window)):
+            raise ValueError(
+                f"{cfg.name}: paged KV cache supports full-attention "
+                f"GQA layers only (got kind={s.kind} cross={s.cross} "
+                f"attn_type={cfg.attn_type} ring={bool(s.window)})")
+    return {
+        "pos": ParamSpec((num_slots,), ("batch",), "int32", "zeros"),
+        "table": ParamSpec((num_slots, max_blocks), ("batch", ""),
+                           "int32", "zeros"),
+        "prefix": [_layer_cache_schema(cfg, s, num_pages, page_size)
+                   for s in prefix],
+        "blocks": stack_specs(
+            {f"p{j}": _layer_cache_schema(cfg, s, num_pages, page_size)
+             for j, s in enumerate(block)}, n_blocks),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -390,21 +426,36 @@ def _forward_cached(params, cfg, inputs, cache, *, moe_fn, mla_absorb, prefill):
         S = x.shape[1]
 
     if prefill:
-        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-        new_pos = jnp.full((B,), S, jnp.int32)
+        # "pos0" (B,) shifts each row's positions: a paged suffix
+        # prefill runs only tokens [pos0, pos0 + S) against a scratch
+        # cache whose [0, pos0) rows hold the gathered shared prefix
+        pos0 = inputs.get("pos0")
+        if pos0 is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            new_pos = jnp.full((B,), S, jnp.int32)
+        else:
+            positions = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+            new_pos = pos0 + S
     else:
         positions = cache["pos"][:, None]
         new_pos = cache["pos"] + 1
+
+    # paged slot cache: per-slot block table, shared across layers
+    # (closure-captured by the block scan — it is read-only there)
+    page_table = None if prefill else cache.get("table")
 
     enc_out = None
     if cfg.is_encoder_decoder and "audio_emb" in inputs:
         enc_out = _encode(params, cfg, inputs["audio_emb"])
 
     new_cache: Dict[str, Any] = {"pos": new_pos, "prefix": []}
+    if "table" in cache:
+        new_cache["table"] = cache["table"]
     for lp, lc, s in zip(params["prefix"], cache["prefix"], prefix):
         x, nc, _ = apply_layer(lp, x, cfg, s, positions=positions, cache=lc,
                                enc_out=enc_out, moe_fn=moe_fn,
-                               mla_absorb=mla_absorb)
+                               mla_absorb=mla_absorb, page_table=page_table)
         new_cache["prefix"].append(nc)
 
     def block_body(h, bp_bc):
@@ -413,7 +464,8 @@ def _forward_cached(params, cfg, inputs, cache, *, moe_fn, mla_absorb, prefill):
         for j, s in enumerate(block):
             h, nc, _ = apply_layer(bp[f"p{j}"], h, cfg, s, positions=positions,
                                    cache=bc[f"p{j}"], enc_out=enc_out,
-                                   moe_fn=moe_fn, mla_absorb=mla_absorb)
+                                   moe_fn=moe_fn, mla_absorb=mla_absorb,
+                                   page_table=page_table)
             ncs[f"p{j}"] = nc
         return h, ncs
 

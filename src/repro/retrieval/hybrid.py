@@ -212,18 +212,28 @@ class CachedRetriever:
 class CircuitBreaker:
     """Closed → open → half-open breaker on a windowed failure rate.
 
-    Fully deterministic and clock-free: the window is the last
+    Deterministic by default and clock-free: the window is the last
     ``window`` *calls* (a bounded deque, so old outcomes age out), and
     the open-state cooldown is counted in *denied calls* rather than
     wall time — the same call sequence always walks the same state
     path, which is what the chaos tests replay.
 
+    Passing ``clock`` (a ``perf_counter``-style callable — the traffic
+    harness's :class:`~repro.serving.traffic.VirtualClock` works) with
+    ``cooldown_s`` switches the open→half-open transition to wall-clock
+    pacing: a sparse caller no longer has to burn ``cooldown`` denied
+    calls to reach a probe, and a hot caller cannot probe a still-down
+    service early just by hammering it.  Runs stay replayable when the
+    clock is virtual.
+
     * **closed** — calls flow; each outcome lands in the window.  When
       the window holds ≥ ``min_calls`` outcomes and the failure rate
       reaches ``failure_threshold``, the breaker trips open.
-    * **open** — ``allow()`` refuses the next ``cooldown - 1`` calls;
-      the ``cooldown``-th attempted call moves the breaker to half-open
-      and becomes its first probe.
+    * **open** — call-count mode: ``allow()`` refuses the next
+      ``cooldown - 1`` calls; the ``cooldown``-th attempted call moves
+      the breaker to half-open and becomes its first probe.  Clock
+      mode: calls are refused until ``cooldown_s`` seconds after the
+      trip; the first call at or past that instant is the probe.
     * **half-open** — up to ``half_open_probes`` trial calls pass; one
       success closes the breaker (window cleared — the service is
       deemed recovered), one failure reopens it.
@@ -231,18 +241,28 @@ class CircuitBreaker:
 
     def __init__(self, *, window: int = 32, failure_threshold: float = 0.5,
                  min_calls: int = 8, cooldown: int = 16,
-                 half_open_probes: int = 1):
+                 half_open_probes: int = 1, clock=None,
+                 cooldown_s: Optional[float] = None):
         assert window >= min_calls >= 1, (window, min_calls)
         assert 0.0 < failure_threshold <= 1.0, failure_threshold
         assert cooldown >= 1 and half_open_probes >= 1
+        if (clock is None) != (cooldown_s is None):
+            raise ValueError("clock and cooldown_s come together: both "
+                             "set (wall-clock cooldown) or neither "
+                             "(call-count cooldown)")
+        if cooldown_s is not None and cooldown_s <= 0:
+            raise ValueError(f"cooldown_s must be > 0, got {cooldown_s}")
         self.window = window
         self.failure_threshold = failure_threshold
         self.min_calls = min_calls
         self.cooldown = cooldown
         self.half_open_probes = half_open_probes
+        self.clock = clock
+        self.cooldown_s = cooldown_s
         self.state = "closed"
         self._events: deque = deque(maxlen=window)   # True = failure
         self._denied_since_open = 0
+        self._opened_at = 0.0
         self._probes_out = 0
         self.n_trips = 0
         self.n_denied = 0
@@ -257,8 +277,13 @@ class CircuitBreaker:
         if self.state == "closed":
             return True
         if self.state == "open":
-            self._denied_since_open += 1
-            if self._denied_since_open >= self.cooldown:
+            if self.clock is not None:
+                cooled = (self.clock() - self._opened_at
+                          >= self.cooldown_s)
+            else:
+                self._denied_since_open += 1
+                cooled = self._denied_since_open >= self.cooldown
+            if cooled:
                 self.state = "half_open"
                 self._probes_out = 0
             else:
@@ -292,6 +317,7 @@ class CircuitBreaker:
         self.state = "open"
         self.n_trips += 1
         self._denied_since_open = 0
+        self._opened_at = self.clock() if self.clock is not None else 0.0
         self._probes_out = 0
 
     def reset(self) -> None:

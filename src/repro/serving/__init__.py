@@ -20,6 +20,9 @@ _LAZY = {
     "EngineStats": "repro.serving.continuous",
     "SingleDeviceExecutor": "repro.serving.executor",
     "ShardedExecutor": "repro.serving.executor",
+    "PagePool": "repro.serving.paged",
+    "PagePlan": "repro.serving.paged",
+    "hash_prefix_pages": "repro.serving.paged",
     "AsyncGateway": "repro.serving.streaming",
     "StreamHandle": "repro.serving.streaming",
     "AdmissionConfig": "repro.serving.streaming",

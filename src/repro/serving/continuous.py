@@ -104,6 +104,12 @@ class EngineStats:
     n_exec_faults: int = 0    # executor admit/decode calls that raised
     n_requeued: int = 0       # faulted requests re-admitted by the engine
     n_timed_out: int = 0      # requests cancelled past their deadline
+    # paged-KV-cache counters (all zero on dense engines)
+    n_deferred_admissions: int = 0   # page pool exhausted -> retried later
+    n_pages_evicted: int = 0         # prefix-cache LRU evictions
+    n_cow_forks: int = 0             # mid-page suffix copy-on-write forks
+    prefill_tokens_avoided: int = 0  # prompt tokens served from shared pages
+    prompt_tokens_total: int = 0     # all admitted (padded) prompt tokens
     # recent per-admission concurrency trace (bounded) — lets tests
     # assert requests from different action buckets were in flight
     # together without growing in long serving runs
@@ -128,7 +134,9 @@ class ContinuousEngine:
                  moe_fn=None, mla_absorb: bool = False,
                  mesh=None, executor=None, clock=None,
                  watchdog_syncs: int = 8, max_requeues: int = 0,
-                 chaos=None):
+                 chaos=None, paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         if executor is None:
             if model is None:
                 raise ValueError("ContinuousEngine needs model+params or "
@@ -138,7 +146,8 @@ class ContinuousEngine:
             kw = dict(num_slots=num_slots, max_len=max_len,
                       max_new_cap=max_new_cap, sync_every=sync_every,
                       prefill_batch=prefill_batch, moe_fn=moe_fn,
-                      mla_absorb=mla_absorb)
+                      mla_absorb=mla_absorb, paged=paged,
+                      page_size=page_size, num_pages=num_pages)
             executor = (ShardedExecutor(model, params, mesh=mesh, **kw)
                         if mesh is not None
                         else SingleDeviceExecutor(model, params, **kw))
@@ -169,6 +178,19 @@ class ContinuousEngine:
         self.max_requeues = max(0, max_requeues)
         self.stats = EngineStats()
         self.stats.cache_allocations = executor.cache_allocations
+
+        # paged KV cache: host-side allocator + prefix cache mirroring
+        # the executor's device page pool.  `_slot_plan[s]` holds the
+        # resident request's PagePlan (its page references) until the
+        # slot is released on harvest / quarantine / expiry / abort.
+        self._pages = None
+        self._slot_plan: List[Optional[object]] = [None] * self.num_slots
+        if getattr(executor, "paged", False):
+            from repro.serving.paged import PagePool
+            self._pages = PagePool(
+                executor.num_pages, executor.page_size,
+                partitions=getattr(executor, "page_partitions", 1),
+                prefix_sharing=prefix_sharing)
 
         S = self.num_slots
         # host mirrors of the device control arrays (refreshed at sync)
@@ -248,26 +270,90 @@ class ContinuousEngine:
 
     # -- admission planning --------------------------------------------
 
+    def _partition(self, slot: int) -> int:
+        """Page-pool partition owning ``slot``'s pages: slots and pages
+        both shard contiguously over the mesh data axis."""
+        return slot * self._pages.partitions // self.num_slots
+
+    def _preview_p0(self, req: SlotRequest, slot: int, plen: int) -> int:
+        row = list(req.prompt) + [PAD] * (plen - len(req.prompt))
+        return self._pages.preview_hit_tokens(row, self._partition(slot))
+
     def _next_group(self) -> List[SlotRequest]:
         """Pop the next admission group off the queue: the head plus up
         to ``prefill_batch - 1`` more prompts with the same padded
         length from a bounded lookahead window (skipped prompts keep
-        their relative queue order)."""
+        their relative queue order).  A paged engine additionally
+        requires the same previewed prefix-hit depth ``p0`` — the whole
+        group prefills one uniform suffix ``[p0, plen)`` — previewing
+        each candidate against the partition of the free slot it would
+        actually receive (members take free slots in deque order)."""
         cap = min(self.prefill_batch, len(self._free))
         head = self._queue.popleft()
         group = [head]
         if cap > 1 and self.admission_lookahead > 0:
             plen = self._padded_len(len(head.prompt))
+            head_p0 = (self._preview_p0(head, self._free[0], plen)
+                       if self._pages is not None else 0)
             picked: List[int] = []
             for i in range(min(len(self._queue), self.admission_lookahead)):
                 if 1 + len(picked) >= cap:
                     break
-                if self._padded_len(len(self._queue[i].prompt)) == plen:
-                    picked.append(i)
+                req = self._queue[i]
+                if self._padded_len(len(req.prompt)) != plen:
+                    continue
+                if (self._pages is not None and self._preview_p0(
+                        req, self._free[1 + len(picked)], plen) != head_p0):
+                    continue
+                picked.append(i)
             group += [self._queue[i] for i in picked]
             for i in reversed(picked):
                 del self._queue[i]
         return group
+
+    def _plan_group(self, toks: np.ndarray, group: List[SlotRequest],
+                    slots: List[int]):
+        """Reserve pages for every row of an admission group.  Returns
+        the plans, or ``None`` — with every reserved reference released
+        — when the pool cannot serve the group (back-pressure) or an
+        eviction during planning changed a later row's hit depth (the
+        deferred group re-previews consistently on the next step)."""
+        plans = []
+        p0: Optional[int] = None
+        for row, req, slot in zip(toks, group, slots):
+            pl = self._pages.plan([int(t) for t in row],
+                                  int(req.max_new_tokens),
+                                  self._partition(slot))
+            if pl is None or (p0 is not None and pl.p0 != p0):
+                if pl is not None:
+                    self._pages.release(pl)
+                for q in plans:
+                    self._pages.release(q)
+                return None
+            p0 = pl.p0
+            plans.append(pl)
+        return plans
+
+    def _dispatch_paged(self, toks: np.ndarray, slot_idx: np.ndarray,
+                        limits: np.ndarray, plans) -> None:
+        """Build the device-side admission arrays from the plans and
+        dispatch the gather + suffix-prefill + paged commit."""
+        ex = self.executor
+        PB = self.prefill_batch
+        MB, MBs, NP = ex.max_blocks, ex.mb_scratch, ex.num_pages
+        p0 = plans[0].p0
+        tables = np.zeros((PB, MB), np.int32)
+        wmask = np.zeros((PB, MBs), bool)
+        gsrc = np.full((PB, MBs), NP, np.int32)
+        pos0 = np.zeros(PB, np.int32)
+        for i, pl in enumerate(plans):
+            tables[i, :len(pl.pages)] = pl.pages
+            wm = pl.write_mask[:MBs]
+            wmask[i, :len(wm)] = wm
+            gsrc[i, :len(pl.gather_src)] = pl.gather_src
+            pos0[i] = pl.p0
+        ex.admit_paged(np.ascontiguousarray(toks[:, p0:]), slot_idx,
+                       limits, pos0, tables, wmask, gsrc)
 
     def _start_admissions(self) -> None:
         """Dispatch prefill+insert for every admittable group — async,
@@ -291,16 +377,45 @@ class ContinuousEngine:
             slot_idx[:len(group)] = slots
             limits = np.zeros(PB, np.int32)
             limits[:len(group)] = [req.max_new_tokens for req in group]
+            plans = None
+            if self._pages is not None:
+                plans = self._plan_group(toks, group, slots)
+                if plans is None:
+                    # pool exhausted (or plan/preview divergence): put
+                    # the group back and retry after decode frees pages
+                    for slot in reversed(slots):
+                        self._free.appendleft(slot)
+                    for req in reversed(group):
+                        self._queue.appendleft(req)
+                    self.stats.n_deferred_admissions += 1
+                    break
             try:
-                self.executor.admit(toks, slot_idx, limits)
+                if plans is not None:
+                    self._dispatch_paged(toks, slot_idx, limits, plans)
+                else:
+                    self.executor.admit(toks, slot_idx, limits)
             except TransientFaultError as exc:
                 self.stats.n_exec_faults += 1
+                if plans is not None:
+                    for pl in plans:
+                        self._pages.release(pl)
                 for slot in reversed(slots):
                     self._free.appendleft(slot)
                 for req in reversed(group):
                     self._fail_or_requeue(req, f"admit fault: {exc}",
                                           prompt_len=plen)
                 break
+            if plans is not None:
+                # register AFTER the successful dispatch: pages become
+                # sharable only once the commit that fills them is in
+                # program order (same-group twins never share)
+                for slot, pl in zip(slots, plans):
+                    self._pages.commit(pl)
+                    self._slot_plan[slot] = pl
+                self.stats.prefill_tokens_avoided += plans[0].p0 * len(group)
+                self.stats.prompt_tokens_total += plen * len(group)
+                self.stats.n_cow_forks = self._pages.n_cow_forks
+                self.stats.n_pages_evicted = self._pages.n_evicted
             self.stats.n_prefills += 1
             now = self._clock()
             for req, slot in zip(group, slots):
@@ -344,9 +459,23 @@ class ContinuousEngine:
             self._requeues.pop(rid, None)
             self._rid[slot] = None
             self._slot_req[slot] = None
+            self._release_slot_pages(slot)
             self._free.append(slot)
 
     # -- fault tolerance -----------------------------------------------
+
+    def _release_slot_pages(self, slot: int) -> None:
+        """Drop a released slot's page references (paged engines only).
+        Safe at harvest/quarantine/expiry: any in-flight program that
+        could read the pages was dispatched before the commit that may
+        later overwrite them, and an idle slot's decode write parks at
+        a sentinel position past its block table."""
+        if self._pages is None:
+            return
+        pl = self._slot_plan[slot]
+        if pl is not None:
+            self._pages.release(pl)
+            self._slot_plan[slot] = None
 
     def _fail_or_requeue(self, req: SlotRequest, reason: str, *,
                          prompt_len: int = 0) -> None:
@@ -381,6 +510,7 @@ class ContinuousEngine:
         req = self._slot_req[slot]
         self._rid[slot] = None
         self._slot_req[slot] = None
+        self._release_slot_pages(slot)
         if req is not None:
             self._fail_or_requeue(req, reason)
 
@@ -437,6 +567,7 @@ class ContinuousEngine:
             self._active[s] = False
             self._rid[s] = None
             self._slot_req[s] = None
+            self._release_slot_pages(s)
             self._free.append(s)
         if self._queue:
             keep = deque()
@@ -472,6 +603,7 @@ class ContinuousEngine:
             self._active[s] = False
             self._stall[s] = 0
             self._last_gen[s] = -1
+            self._release_slot_pages(s)
             self._free.append(s)
             if req is not None:
                 self._fail_or_requeue(req, reason)

@@ -86,7 +86,9 @@ class SingleDeviceExecutor:
                  max_len: int = 512, max_new_cap: int = 64,
                  sync_every: int = 4, prefill_batch: int = 1,
                  moe_fn: Optional[Callable] = None,
-                 mla_absorb: bool = False, health_checks: bool = True):
+                 mla_absorb: bool = False, health_checks: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -97,10 +99,29 @@ class SingleDeviceExecutor:
         self.moe_fn = moe_fn
         self.mla_absorb = mla_absorb
         self.health_checks = health_checks
+        self.paged = paged
+        self.page_partitions = 1
 
         # the ONLY cache allocations in the executor's lifetime: the
-        # slot cache and the prefill scratch (both reused forever)
-        self._cache = model.init_cache(num_slots, max_len)
+        # slot cache (dense per-slot rows, or the global page pool +
+        # block tables) and the dense prefill scratch (reused forever)
+        if paged:
+            if max_len % page_size != 0:
+                raise ValueError(f"max_len={max_len} must be a multiple "
+                                 f"of page_size={page_size}")
+            self.page_size = page_size
+            # scratch rows reshape to mb_scratch pages; tables carry one
+            # extra write-overflow block (an idle slot's held-position
+            # write may land one past max_len-1 — see _decode_chunk_fn)
+            self.mb_scratch = max_len // page_size
+            self.max_blocks = self.mb_scratch + 1
+            self.num_pages = (num_pages if num_pages is not None
+                              else num_slots * self.max_blocks)
+            self._validate_pages()
+            self._cache = model.init_paged_cache(
+                num_slots, self.num_pages, page_size, self.max_blocks)
+        else:
+            self._cache = model.init_cache(num_slots, max_len)
         self._pcache = model.init_cache(self.prefill_batch, max_len)
         self.cache_allocations = 2
 
@@ -115,15 +136,31 @@ class SingleDeviceExecutor:
         self._place()
         self._compile()
 
+    def _validate_pages(self) -> None:
+        per = self.num_pages // max(self.page_partitions, 1)
+        if per < self.max_blocks:
+            raise ValueError(
+                f"num_pages={self.num_pages} over {self.page_partitions} "
+                f"partition(s) leaves {per} pages per partition — fewer "
+                f"than the {self.max_blocks} blocks one max_len request "
+                f"needs; admission could never make progress")
+
     # -- layout hooks (overridden by ShardedExecutor) -------------------
 
     def _place(self) -> None:
         pass
 
     def _compile(self) -> None:
-        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
-        self._commit = jax.jit(self._commit_fn,
-                               donate_argnums=(0, 2, 3, 4, 5, 6))
+        if self.paged:
+            self._gather = jax.jit(self._gather_fn, donate_argnums=(1,))
+            self._prefill = jax.jit(self._prefill_paged_fn,
+                                    donate_argnums=(1,))
+            self._commit = jax.jit(self._commit_paged_fn,
+                                   donate_argnums=(0, 2, 3, 4, 5, 6))
+        else:
+            self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
+            self._commit = jax.jit(self._commit_fn,
+                                   donate_argnums=(0, 2, 3, 4, 5, 6))
         self._decode = jax.jit(self._decode_chunk_fn,
                                donate_argnums=(1, 2, 3, 4, 6, 7))
         self._clear_flags = jax.jit(self._clear_flags_fn,
@@ -172,6 +209,83 @@ class SingleDeviceExecutor:
         out = out.at[slots, 0].set(firsts, mode="drop")
         return new, tok, active, gen, limit, out
 
+    # -- paged jitted bodies --------------------------------------------
+
+    def _gather_fn(self, cache, pcache, src):
+        """Copy shared prefix pages from the pool into the prefill
+        scratch rows (copy-on-write borrow).  ``src`` is
+        ``(PB, mb_scratch)`` int32 pool page ids; the sentinel
+        ``num_pages`` leaves that scratch block untouched.  Reads the
+        slot cache's pools, so it serializes behind any in-flight
+        decode chunk — shared pages are never read mid-write."""
+        NP, ps = self.num_pages, self.page_size
+        PB, MBs = self.prefill_batch, self.mb_scratch
+        flat = src.reshape(-1)
+        valid = flat < NP
+        safe = jnp.minimum(flat, NP - 1)
+
+        def g(bdim):
+            def f(scratch, pool):
+                got = jnp.take(pool, safe, axis=bdim)
+                lead = scratch.shape[:bdim]
+                rest = scratch.shape[bdim + 2:]
+                cur = scratch.reshape(lead + (PB * MBs, ps) + rest)
+                m = valid.reshape((1,) * bdim + (PB * MBs,)
+                                  + (1,) * (1 + len(rest)))
+                return jnp.where(m, got.astype(scratch.dtype),
+                                 cur).reshape(scratch.shape)
+            return f
+        new = dict(pcache)
+        new["prefix"] = jax.tree_util.tree_map(g(0), pcache["prefix"],
+                                               cache["prefix"])
+        new["blocks"] = jax.tree_util.tree_map(g(1), pcache["blocks"],
+                                               cache["blocks"])
+        return new
+
+    def _prefill_paged_fn(self, params, pcache, tokens, pos0):
+        """Suffix prefill: rows start at absolute position ``pos0``
+        (their shared prefix is already in the scratch via the page
+        gather), so only the unique suffix runs through the model."""
+        logits, pcache = self.model.prefill(
+            params, {"tokens": tokens, "pos0": pos0}, pcache,
+            moe_fn=self.moe_fn, mla_absorb=self.mla_absorb)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), pcache
+
+    def _commit_paged_fn(self, cache, pcache, tok, active, gen, limit, out,
+                         slots, firsts, limits, tables, wmask):
+        """Scatter the prefilled scratch rows into their allocated
+        pages and write the admission group's slot state + block
+        tables.  ``wmask`` masks out shared (borrowed) blocks — only
+        freshly written blocks land in the pool; masked / unused rows
+        scatter to page id ``num_pages`` and are dropped."""
+        NP, ps = self.num_pages, self.page_size
+        PB, MBs = self.prefill_batch, self.mb_scratch
+        new = dict(cache)
+        new["pos"] = cache["pos"].at[slots].set(pcache["pos"], mode="drop")
+        new["table"] = cache["table"].at[slots].set(tables, mode="drop")
+        pages = jnp.where(wmask, tables[:, :MBs], NP).reshape(-1)
+
+        def ins(bdim):
+            def f(pool, scratch):
+                lead = scratch.shape[:bdim]
+                rest = scratch.shape[bdim + 2:]
+                resh = scratch.reshape(lead + (PB * MBs, ps) + rest)
+                idx = (slice(None),) * bdim + (pages,)
+                return pool.at[idx].set(resh.astype(pool.dtype),
+                                        mode="drop")
+            return f
+        new["prefix"] = jax.tree_util.tree_map(ins(0), cache["prefix"],
+                                               pcache["prefix"])
+        new["blocks"] = jax.tree_util.tree_map(ins(1), cache["blocks"],
+                                               pcache["blocks"])
+        flags = (firsts != EOS) & (limits > 1)
+        tok = tok.at[slots].set(firsts, mode="drop")
+        active = active.at[slots].set(flags, mode="drop")
+        gen = gen.at[slots].set(1, mode="drop")
+        limit = limit.at[slots].set(limits, mode="drop")
+        out = out.at[slots, 0].set(firsts, mode="drop")
+        return new, tok, active, gen, limit, out
+
     def _decode_chunk_fn(self, params, cache, tok, active, gen, limit, out,
                          bad):
         """`sync_every` decode steps over all slots, done-mask on device.
@@ -187,6 +301,13 @@ class SingleDeviceExecutor:
         def step(carry, _):
             cache, tok, active, gen, out, bad = carry
             pos0 = cache["pos"]
+            if self.paged:
+                # idle slots must not scribble into pages that may have
+                # been released and reassigned: park them at a position
+                # past the block table so the paged write drops
+                cache = dict(cache)
+                cache["pos"] = jnp.where(
+                    active, pos0, self.max_blocks * self.page_size)
             inp = jnp.where(active, tok, PAD)
             logits, cache = self.model.decode(
                 params, {"tokens": inp[:, None]}, cache, moe_fn=self.moe_fn,
@@ -225,6 +346,8 @@ class SingleDeviceExecutor:
         touches the scratch cache, so it runs concurrently with any
         decode chunk already in flight; the insert/commit is serialized
         behind that chunk by its data dependency on the slot cache."""
+        if self.paged:
+            raise RuntimeError("paged executor: use admit_paged()")
         firsts, self._pcache = self._prefill(
             self.params, self._pcache, self._tokens_to_device(tokens))
         (self._cache, self._dtok, self._dactive, self._dgen, self._dlimit,
@@ -233,6 +356,38 @@ class SingleDeviceExecutor:
             self._dgen, self._dlimit, self._dout,
             self._host_to_device(slot_idx), firsts,
             self._host_to_device(limits))
+
+    def admit_paged(self, tokens: np.ndarray, slot_idx: np.ndarray,
+                    limits: np.ndarray, pos0: np.ndarray,
+                    tables: np.ndarray, write_mask: np.ndarray,
+                    gather_src: np.ndarray) -> None:
+        """Paged admission: optional shared-page gather, suffix-only
+        prefill from ``pos0``, then scatter the written pages into the
+        pool and install the block tables.  ``tokens`` holds only the
+        unique suffixes ``(PB, plen - p0)``; ``tables`` is
+        ``(PB, max_blocks)``; ``write_mask`` ``(PB, mb_scratch)`` marks
+        freshly written blocks; ``gather_src`` ``(PB, mb_scratch)``
+        holds source pool pages (sentinel ``num_pages`` = no gather).
+        Still pure async dispatch — but a gather reads the slot
+        cache's pools, so cache-hit admissions serialize behind the
+        in-flight decode chunk (miss admissions overlap as before)."""
+        if not self.paged:
+            raise RuntimeError("dense executor: use admit()")
+        if int(gather_src.min(initial=self.num_pages)) < self.num_pages:
+            self._pcache = self._gather(
+                self._cache, self._pcache,
+                self._host_to_device(np.ascontiguousarray(gather_src)))
+        firsts, self._pcache = self._prefill(
+            self.params, self._pcache, self._tokens_to_device(tokens),
+            self._host_to_device(pos0))
+        (self._cache, self._dtok, self._dactive, self._dgen, self._dlimit,
+         self._dout) = self._commit(
+            self._cache, self._pcache, self._dtok, self._dactive,
+            self._dgen, self._dlimit, self._dout,
+            self._host_to_device(slot_idx), firsts,
+            self._host_to_device(limits),
+            self._host_to_device(np.ascontiguousarray(tables)),
+            self._host_to_device(np.ascontiguousarray(write_mask)))
 
     def decode_chunk(self) -> None:
         (self._cache, self._dtok, self._dactive, self._dgen,
@@ -318,8 +473,25 @@ class ShardedExecutor(SingleDeviceExecutor):
         # FSDP pass never touches them)
         self._param_sh = shardings_for_schema(self.model.schema, self.mesh,
                                               fsdp=False)
-        self._cache_sh = shardings_for_schema(
-            self.model.cache_schema(self.num_slots, self.max_len), self.mesh)
+        if self.paged:
+            # the page pool shards its page dim over data (each device
+            # owns num_pages/dp pages) and kv-heads over model; the
+            # host-side allocator partitions its free lists to match so
+            # a slot's pages stay on the devices that own the slot row
+            if self.num_pages % max(dp, 1) != 0:
+                raise ValueError(
+                    f"num_pages={self.num_pages} must be divisible by "
+                    f"the mesh data-axis size {dp} to shard the pool")
+            self.page_partitions = max(dp, 1)
+            self._validate_pages()
+            self._cache_sh = shardings_for_schema(
+                self.model.paged_cache_schema(
+                    self.num_slots, self.num_pages, self.page_size,
+                    self.max_blocks), self.mesh)
+        else:
+            self._cache_sh = shardings_for_schema(
+                self.model.cache_schema(self.num_slots, self.max_len),
+                self.mesh)
         self._pcache_sh = shardings_for_schema(
             self.model.cache_schema(self.prefill_batch, self.max_len),
             self.mesh)
@@ -345,12 +517,23 @@ class ShardedExecutor(SingleDeviceExecutor):
 
     def _compile(self) -> None:
         s = self._slot_sh
-        self._prefill = jax.jit(
-            self._prefill_fn, donate_argnums=(1,),
-            out_shardings=(self._row1_sh, self._pcache_sh))
-        self._commit = jax.jit(
-            self._commit_fn, donate_argnums=(0, 2, 3, 4, 5, 6),
-            out_shardings=(self._cache_sh, s, s, s, s, self._out_sh))
+        if self.paged:
+            self._gather = jax.jit(
+                self._gather_fn, donate_argnums=(1,),
+                out_shardings=self._pcache_sh)
+            self._prefill = jax.jit(
+                self._prefill_paged_fn, donate_argnums=(1,),
+                out_shardings=(self._row1_sh, self._pcache_sh))
+            self._commit = jax.jit(
+                self._commit_paged_fn, donate_argnums=(0, 2, 3, 4, 5, 6),
+                out_shardings=(self._cache_sh, s, s, s, s, self._out_sh))
+        else:
+            self._prefill = jax.jit(
+                self._prefill_fn, donate_argnums=(1,),
+                out_shardings=(self._row1_sh, self._pcache_sh))
+            self._commit = jax.jit(
+                self._commit_fn, donate_argnums=(0, 2, 3, 4, 5, 6),
+                out_shardings=(self._cache_sh, s, s, s, s, self._out_sh))
         self._decode = jax.jit(
             self._decode_chunk_fn, donate_argnums=(1, 2, 3, 4, 6, 7),
             out_shardings=(self._cache_sh, s, s, s, self._out_sh, s))

@@ -226,6 +226,15 @@ class ChaosExecutor:
             self._injector.apply_error_kind(spec, "executor.admit")
         self._inner.admit(tokens, slot_idx, limits)
 
+    def admit_paged(self, tokens, slot_idx, limits, pos0, tables,
+                    write_mask, gather_src) -> None:
+        # same seam/counter as admit: one admission, one fault chance
+        spec = self._injector.fire("executor.admit")
+        if spec is not None:
+            self._injector.apply_error_kind(spec, "executor.admit")
+        self._inner.admit_paged(tokens, slot_idx, limits, pos0, tables,
+                                write_mask, gather_src)
+
     def decode_chunk(self) -> None:
         spec = self._injector.fire("executor.decode")
         if spec is not None:

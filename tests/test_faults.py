@@ -117,6 +117,63 @@ def test_breaker_window_evicts_old_failures():
     assert b.failure_rate() == 0.0 and b.state == "closed"
 
 
+def test_breaker_wall_clock_cooldown():
+    """Clock mode: open→half-open paces on elapsed time, not on denied
+    calls — hammering before the cooldown never reaches a probe, and a
+    single sparse call after it does."""
+    t = [0.0]
+    b = CircuitBreaker(window=8, min_calls=4, failure_threshold=0.5,
+                       cooldown=3, half_open_probes=1,
+                       clock=lambda: t[0], cooldown_s=5.0)
+    for _ in range(4):
+        assert b.allow()
+        b.record_failure()
+    assert b.state == "open"
+    # many attempts inside the cooldown window: all denied (the
+    # call-count path would already have probed after 3)
+    t[0] = 4.9
+    for _ in range(10):
+        assert not b.allow()
+    assert b.state == "open" and b.n_denied == 10
+    # first call at/past the deadline is the probe, however sparse
+    t[0] = 5.0
+    assert b.allow() and b.state == "half_open"
+    b.record_success()
+    assert b.state == "closed"
+    # reopen; a probe failure re-arms the clock from the new trip
+    for _ in range(4):
+        b.record_failure()
+    t[0] = 11.0
+    assert b.allow()            # 11.0 - 5.0 > 5s: probe
+    b.record_failure()
+    assert b.state == "open"
+    t[0] = 15.9
+    assert not b.allow()        # only 4.9s since the re-trip at 11.0
+    t[0] = 16.0
+    assert b.allow() and b.state == "half_open"
+
+
+def test_breaker_clock_mode_validation():
+    with pytest.raises(ValueError, match="come together"):
+        CircuitBreaker(clock=lambda: 0.0)
+    with pytest.raises(ValueError, match="come together"):
+        CircuitBreaker(cooldown_s=1.0)
+    with pytest.raises(ValueError, match="> 0"):
+        CircuitBreaker(clock=lambda: 0.0, cooldown_s=0.0)
+
+
+def test_breaker_call_count_mode_unchanged_by_default():
+    """The default breaker stays clock-free: no clock attribute use,
+    cooldown counted in denied calls exactly as before."""
+    b = CircuitBreaker(window=8, min_calls=4, failure_threshold=0.5,
+                       cooldown=3)
+    assert b.clock is None and b.cooldown_s is None
+    for _ in range(4):
+        b.record_failure()
+    assert not b.allow() and not b.allow()
+    assert b.allow() and b.state == "half_open"
+
+
 def test_breaker_random_walk_invariants_deterministic():
     """State-machine property test: under a seeded random call
     sequence the breaker (a) only ever occupies its three states,

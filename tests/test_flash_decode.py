@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_decode
+from repro.kernels import flash_decode, paged_flash_decode
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_pallas
 
@@ -81,6 +81,63 @@ def test_flash_decode_split_kv_invariance():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    rtol=1e-6, atol=1e-6)
+
+
+def _paged_case(B, MB, ps, H, Hkv, Dh, seed=0):
+    """Random page pools + a table of distinct pages per slot."""
+    NP = B * MB + 3
+    q = jax.random.normal(_key(seed), (B, H, Dh))
+    kp = jax.random.normal(_key(seed + 1), (NP, ps, Hkv, Dh))
+    vp = jax.random.normal(_key(seed + 2), (NP, ps, Hkv, Dh))
+    perm = np.random.default_rng(seed).permutation(NP)[:B * MB]
+    table = jnp.asarray(perm.reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.linspace(1, MB * ps, B).round().astype(np.int32))
+    return q, kp, vp, table, lens
+
+
+@pytest.mark.parametrize("ps", [8, 16, 32])
+@pytest.mark.parametrize("B,MB,H,Hkv,Dh", [
+    (3, 4, 4, 2, 32),          # GQA grouping
+    (2, 6, 2, 2, 64),
+    (1, 2, 4, 1, 32),          # MQA, tiny table
+])
+def test_paged_flash_decode_matches_ref(B, MB, H, Hkv, Dh, ps):
+    q, kp, vp, table, lens = _paged_case(B, MB, ps, H, Hkv, Dh)
+    got = paged_flash_decode(q, kp, vp, table, lens)
+    want = ref.paged_flash_decode_ref(q, kp, vp, table, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_flash_decode_matches_dense_gather():
+    """Gathering the table's pages into contiguous rows and running the
+    dense kernel must agree with reading through the table in place."""
+    B, MB, ps, H, Hkv, Dh = 2, 4, 16, 4, 2, 32
+    q, kp, vp, table, lens = _paged_case(B, MB, ps, H, Hkv, Dh, seed=9)
+    rows_k = kp[table].reshape(B, MB * ps, Hkv, Dh)
+    rows_v = vp[table].reshape(B, MB * ps, Hkv, Dh)
+    dense = flash_decode(q, rows_k, rows_v, lens, block_kv=ps)
+    paged = paged_flash_decode(q, kp, vp, table, lens)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_paged_flash_decode_ignores_unallocated_tail():
+    """Table entries past a slot's length may point at any page (the
+    engine zero-fills) — scribbling on those pages must not change the
+    slot's output."""
+    B, MB, ps, H, Hkv, Dh = 2, 4, 8, 2, 2, 32
+    q, kp, vp, table, lens = _paged_case(B, MB, ps, H, Hkv, Dh, seed=4)
+    lens = jnp.array([10, 32], jnp.int32)   # slot 0 uses 2 of 4 pages
+    o1 = paged_flash_decode(q, kp, vp, table, lens)
+    junk = table[0, 2]
+    kp2 = kp.at[junk].set(11.0)
+    vp2 = vp.at[junk].set(-5.0)
+    # redirect the tail blocks too: both junk content and junk ids
+    table2 = table.at[0, 3].set(table[1, 0])
+    o2 = paged_flash_decode(q, kp2, vp2, table2, lens)
+    np.testing.assert_allclose(np.asarray(o1[0]), np.asarray(o2[0]),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_model_decode_flash_path_matches_dense():

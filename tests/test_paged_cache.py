@@ -1,0 +1,196 @@
+"""Host-side paged KV-cache bookkeeping as a pure unit: allocator
+alloc/free/refcount invariants, prefix-cache copy-on-write forks,
+pool-exhaustion back-pressure, and prefix-hash determinism.
+
+No JAX anywhere — :mod:`repro.serving.paged` is numpy/stdlib only, so
+these tests cover the allocator exactly as the engine drives it."""
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import pytest
+
+from repro.serving.paged import PagePool, hash_prefix_pages
+
+PS = 4  # page size for most tests
+
+
+def toks(n, seed=0):
+    rng = random.Random(seed)
+    return [rng.randrange(4, 500) for _ in range(n)]
+
+
+# -- hashing ------------------------------------------------------------
+
+def test_prefix_hash_determinism_across_instances():
+    t = toks(20)
+    a = hash_prefix_pages(t, PS)
+    b = hash_prefix_pages(list(t), PS)
+    assert a == b and len(a) == 5
+
+
+def test_prefix_hash_is_cumulative():
+    """A page hash covers the whole prefix, not just its own tokens:
+    same page-1 tokens after a different page 0 must not collide."""
+    t1 = toks(8, seed=1)
+    t2 = toks(4, seed=2) + t1[4:]
+    h1 = hash_prefix_pages(t1, PS)
+    h2 = hash_prefix_pages(t2, PS)
+    assert t1[4:] == t2[4:]
+    assert h1[1] != h2[1]
+
+
+def test_prefix_hash_full_pages_only():
+    assert hash_prefix_pages(toks(7), PS) == hash_prefix_pages(toks(7)[:4],
+                                                               PS)
+
+
+# -- allocator invariants ----------------------------------------------
+
+def test_alloc_free_refcount_invariants():
+    pool = PagePool(8, PS)
+    plan = pool.plan(toks(8), limit=3)  # 8+3+1=12 -> 3 blocks
+    assert plan is not None and len(plan.pages) == 3
+    assert len(set(plan.pages)) == 3
+    assert all(pool.refcount(p) == 1 for p in plan.pages)
+    assert pool.pages_in_use == 3 and pool.n_free() == 5
+    pool.release(plan)
+    assert pool.pages_in_use == 0 and pool.n_free() == 8
+
+
+def test_double_release_is_an_error():
+    pool = PagePool(4, PS)
+    plan = pool.plan(toks(4), limit=0)
+    pool.release(plan)
+    with pytest.raises(AssertionError):
+        pool.release(plan)
+
+
+def test_registered_pages_survive_release():
+    """Commit registers full prompt pages in the prefix cache (one cache
+    ref), so releasing the slot keeps them resident for future hits."""
+    pool = PagePool(8, PS)
+    plan = pool.plan(toks(8), limit=0)
+    pool.commit(plan)
+    assert [pool.refcount(p) for p in plan.pages[:2]] == [2, 2]
+    pool.release(plan)
+    assert [pool.refcount(p) for p in plan.pages[:2]] == [1, 1]
+    assert pool.cached_pages() == 2
+    # and a later identical prompt hits them
+    assert pool.preview_hit_tokens(toks(8)) == 7  # capped at plen-1
+
+
+# -- prefix sharing / copy-on-write ------------------------------------
+
+def test_cow_fork_shares_full_pages_and_forks_partial():
+    pool = PagePool(16, PS)
+    t = toks(12)
+    first = pool.plan(t, limit=3)
+    pool.commit(first)
+    # identical prompt: hits all 3 full pages, p0 capped at 11 -> 2
+    # full shared pages + a CoW fork of page 2
+    second = pool.plan(t, limit=3)
+    assert second.p0 == 11 and second.shared == 2 and second.cow
+    assert second.pages[:2] == first.pages[:2]          # borrowed
+    assert second.pages[2] != first.pages[2]            # forked
+    assert pool.refcount(first.pages[0]) == 3            # cache+2 slots
+    assert second.gather_src == first.pages[:3]          # incl. CoW src
+    assert second.write_mask == [False, False, True, False]
+    pool.release(second)
+    assert pool.refcount(first.pages[0]) == 2
+
+
+def test_divergent_suffix_shares_only_common_prefix():
+    pool = PagePool(16, PS)
+    t = toks(12)
+    first = pool.plan(t, limit=0)
+    pool.commit(first)
+    other = t[:8] + toks(4, seed=9)
+    second = pool.plan(other, limit=0)
+    assert second.p0 == 8 and second.shared == 2 and not second.cow
+    assert second.pages[:2] == first.pages[:2]
+    assert second.pages[2] != first.pages[2]
+
+
+def test_same_group_no_share_before_commit():
+    """Two identical prompts planned before either commits must not
+    share (the second's gather would read pages the first's prefill has
+    not yet written)."""
+    pool = PagePool(16, PS)
+    t = toks(8)
+    a = pool.plan(t, limit=0)
+    b = pool.plan(t, limit=0)
+    assert b.shared == 0 and not set(a.pages) & set(b.pages)
+
+
+# -- exhaustion / back-pressure ----------------------------------------
+
+def test_pool_exhaustion_defers_not_crashes():
+    pool = PagePool(4, PS)
+    a = pool.plan(toks(8), limit=3)   # needs 3 pages
+    assert a is not None
+    b = pool.plan(toks(8, seed=5), limit=3)
+    assert b is None                   # only 1 page left -> defer
+    assert pool.pages_in_use == 3      # failed plan took nothing
+    pool.release(a)
+    assert pool.plan(toks(8, seed=5), limit=3) is not None
+
+
+def test_eviction_frees_only_unreferenced_cache_pages():
+    pool = PagePool(4, PS)
+    held = pool.plan(toks(8), limit=0)   # 2 prompt pages + 1 slack
+    pool.commit(held)                    # both registered, still held
+    # needs 3 pages; only 1 free and every cached page is slot-held
+    assert pool.plan(toks(8, seed=5), limit=3) is None
+    pool.release(held)                   # cache refs remain
+    nxt = pool.plan(toks(8, seed=5), limit=3)
+    assert nxt is not None and pool.n_evicted >= 1
+
+
+def test_lru_eviction_order():
+    pool = PagePool(8, PS)
+    for seed in (1, 2):                        # register a then b
+        p = pool.plan(toks(8, seed=seed), limit=0)
+        pool.commit(p)
+        pool.release(p)
+    # a re-planned: borrowing its first page bumps it in the LRU
+    c = pool.plan(toks(8, seed=1), limit=0)
+    assert c.shared == 1
+    pool.commit(c)
+    pool.release(c)
+    # 4 cached + 4 free; 7 blocks forces exactly 3 evictions, oldest
+    # first: a's page 1 and both of b's go, a's bumped page 0 survives
+    big = pool.plan(toks(24, seed=3), limit=0)
+    assert big is not None and pool.n_evicted == 3
+    assert pool.preview_hit_tokens(toks(8, seed=2)) == 0
+    assert pool.preview_hit_tokens(toks(8, seed=1)) == 4
+
+
+# -- partitions ---------------------------------------------------------
+
+def test_partitioned_pools_are_isolated():
+    pool = PagePool(8, PS, partitions=2)
+    a = pool.plan(toks(8), limit=0, partition=0)
+    pool.commit(a)
+    assert all(p < 4 for p in a.pages)
+    # same prompt on the other partition: no cross-partition hits
+    b = pool.plan(toks(8), limit=0, partition=1)
+    assert b.shared == 0 and all(p >= 4 for p in b.pages)
+    assert pool.preview_hit_tokens(toks(8), partition=0) == 7
+    assert pool.preview_hit_tokens(toks(8), partition=1) == 0
+
+
+def test_partition_size_must_divide():
+    with pytest.raises(ValueError):
+        PagePool(9, PS, partitions=2)
+
+
+def test_sharing_disabled():
+    pool = PagePool(8, PS, prefix_sharing=False)
+    a = pool.plan(toks(8), limit=0)
+    pool.commit(a)
+    assert pool.preview_hit_tokens(toks(8)) == 0
+    b = pool.plan(toks(8), limit=0)
+    assert b.shared == 0 and not b.cow

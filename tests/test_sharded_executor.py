@@ -203,6 +203,87 @@ def test_sharded_dp4_mp2_tensor_parallel_parity():
     assert "SHARDED-MP-PARITY-OK" in out.stdout, out.stderr[-2000:]
 
 
+SCRIPT_CHAOS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, numpy as np
+
+from repro.configs import get_config
+from repro.data.tokenizer import trim_at_eos as trim
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.faults import (ChaosExecutor, ChaosInjector, FaultPlan,
+                                  FaultSpec)
+
+cfg = dataclasses.replace(get_config("qwen1.5-32b", "smoke"),
+                          dtype="float32")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(4, cfg.vocab_size, size=n))
+           for n in (10, 7, 9, 5, 8, 11)]
+mesh = make_serving_mesh("dp=4,mp=2", model_cfg=cfg)
+
+def build(chaos=None, **kw):
+    return ContinuousEngine(model, params, num_slots=4, max_len=64,
+                            max_new_cap=16, sync_every=2, prefill_batch=2,
+                            mesh=mesh, chaos=chaos, **kw)
+
+clean = build().generate_many(prompts, max_new_tokens=10)
+
+# injected NaN poison on one slot of the REAL dp=4,mp=2 executor: only
+# that slot's request fails, it is quarantined, and the surviving
+# peers' tokens are bit-identical to the clean run
+plan = FaultPlan(specs=(FaultSpec(site="executor.decode", kind="nan",
+                                  start=1, count=1, slots=(2,)),))
+eng = build(ChaosInjector(plan))
+assert isinstance(eng.executor, ChaosExecutor)
+rids = [eng.reserve_rid() for _ in prompts]
+for rid, p in zip(rids, prompts):
+    eng.submit(rid, p, 10)
+done = eng.run()
+outs = [done[r] for r in rids]
+failed = [i for i, o in enumerate(outs) if o.failed]
+assert len(failed) == 1 and outs[failed[0]].transient, failed
+assert eng.stats.n_nan_trips == 1 and eng.quarantined_slots == {2}
+for i, o in enumerate(outs):
+    if i not in failed:
+        assert trim(o.tokens) == trim(clean[i].tokens), i
+# the quarantined slot returns to service after reset
+assert eng.reset_quarantine() == [2]
+more = eng.generate_many(prompts[:2], max_new_tokens=6)
+assert all(not o.failed for o in more)
+
+# a transient decode fault aborts the chunk; with one requeue allowed
+# every request still completes, token-identical to the clean run
+plan2 = FaultPlan(specs=(FaultSpec(site="executor.decode", kind="raise",
+                                   start=1, count=1),))
+eng2 = build(ChaosInjector(plan2), max_requeues=1)
+outs2 = eng2.generate_many(prompts, max_new_tokens=10)
+assert all(not o.failed for o in outs2)
+assert eng2.stats.n_exec_faults == 1 and eng2.stats.n_requeued > 0
+for i, (o, c) in enumerate(zip(outs2, clean)):
+    assert trim(o.tokens) == trim(c.tokens), i
+print("SHARDED-CHAOS-OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_chaos_on_sharded_dp4_mp2():
+    """ChaosExecutor over the REAL ShardedExecutor on a forced-8-device
+    dp=4,mp=2 mesh: injected decode faults quarantine / requeue exactly
+    as on the fake, with surviving peers token-identical."""
+    root = Path(__file__).resolve().parents[1]
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT_CHAOS],
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"},
+        capture_output=True, text=True, timeout=900)
+    assert "SHARDED-CHAOS-OK" in out.stdout, out.stderr[-2000:]
+
+
 def test_mp_divisibility_check_names_config():
     """check_mp_divisibility fails fast (no devices needed), derived
     from the real resolver — it names the config and the tensors that
