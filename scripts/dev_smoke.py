@@ -24,7 +24,21 @@ def batch_for(cfg, B=2, S=32):
     return inputs, labels
 
 
+def run_lint_gate():
+    """The same zero-findings gate CI runs, first — a lint violation
+    fails the smoke before any model compiles."""
+    from pathlib import Path
+
+    from repro.analysis.cli import main as lint_main
+    src = Path(__file__).resolve().parents[1] / "src"
+    rc = lint_main([str(src), "--fail-on-findings"])
+    if rc != 0:
+        sys.exit("reprolint found unsuppressed findings (see above)")
+    print("OK reprolint: src/ is clean")
+
+
 def main():
+    run_lint_gate()
     only = sys.argv[1:] or ARCH_IDS
     for arch in only:
         cfg = get_config(arch, "smoke")

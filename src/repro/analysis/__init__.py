@@ -1,0 +1,26 @@
+"""Static analysis for the serving stack.
+
+Two tools live here:
+
+* ``reprolint`` (:mod:`repro.analysis.base`, :mod:`repro.analysis.walker`,
+  :mod:`repro.analysis.rules`) — an AST-based invariant linter run as
+  ``python -m repro.analysis src/``.  Eight PRs of growth encoded
+  load-bearing invariants only by convention (injectable clocks, jit
+  donation + ``out_shardings``, Pallas VMEM budgets and masked tails,
+  the typed error taxonomy, lock discipline in the streaming gateway);
+  the linter makes them machine-checked.  CI enforces zero unsuppressed
+  findings.  The linter is stdlib-only — it never imports jax — so it
+  runs anywhere the source tree does.
+* ``roofline`` (:mod:`repro.analysis.roofline`) — the three-term
+  roofline model over dry-run artifacts (imports the heavy config
+  machinery; deliberately NOT re-exported here).
+"""
+from repro.analysis.base import Finding, LintResult, Rule, all_rules
+from repro.analysis.lintconfig import DEFAULT_CONFIG, LintConfig, RuleConfig
+from repro.analysis.walker import ModuleContext, run_lint
+
+__all__ = [
+    "Finding", "LintResult", "Rule", "all_rules",
+    "LintConfig", "RuleConfig", "DEFAULT_CONFIG",
+    "ModuleContext", "run_lint",
+]

@@ -1,0 +1,3 @@
+"""reprolint rule modules — importing this package registers them all."""
+from repro.analysis.rules import (clock, determinism, exceptions,  # noqa: F401
+                                  jit_donation, pallas_vmem, threads)

@@ -1,0 +1,70 @@
+"""RPL002 determinism: no unseeded module-level RNG in the serving core.
+
+Greedy-decode token parity, seeded chaos replay, and the offline-log /
+OPE pipeline are all bit-for-bit reproducibility contracts (tested as
+such).  Module-level RNG (``random.random()``, ``np.random.rand()``)
+draws from hidden global state that any import can perturb — one call
+in a serving path silently breaks every parity test downstream.  The
+repo idiom is an explicitly seeded generator object
+(``np.random.default_rng(seed)`` / ``jax.random.PRNGKey(seed)``)
+threaded through constructors.
+
+Flagged: any call into the stdlib ``random`` module, any
+``numpy.random.*`` legacy global function (``rand``/``randn``/
+``seed``/``shuffle``/...), and ``numpy.random.default_rng()`` /
+``numpy.random.Generator`` constructions *with no seed argument*.
+Instance methods on a seeded generator (``rng.normal(...)``) are fine
+— the receiver is a local name, not the module.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.base import Finding, Rule
+from repro.analysis.walker import dotted_name, qualified
+
+# numpy legacy global-state functions (module-level draws + seeding)
+_NP_GLOBAL = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "normal", "uniform",
+    "standard_normal", "beta", "binomial", "poisson", "exponential",
+    "gamma", "seed", "get_state", "set_state", "bytes",
+}
+
+
+class DeterminismRule(Rule):
+    id = "RPL002"
+    name = "determinism"
+    summary = ("unseeded module-level RNG (random.* / np.random.*) in a "
+               "deterministic path")
+
+    def check(self, ctx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = qualified(dotted_name(node.func), ctx.imports)
+            if not name:
+                continue
+            if name.startswith("random."):
+                yield self.finding(
+                    ctx, node,
+                    f"stdlib global RNG `{name}()` — use an explicitly "
+                    f"seeded np.random.default_rng(seed) threaded "
+                    f"through the constructor")
+            elif name.startswith("numpy.random."):
+                tail = name.split(".", 2)[2]
+                if tail in _NP_GLOBAL:
+                    yield self.finding(
+                        ctx, node,
+                        f"numpy global RNG `np.random.{tail}()` draws "
+                        f"from hidden shared state — use a seeded "
+                        f"np.random.default_rng(seed) instance")
+                elif tail in ("default_rng", "Generator", "PCG64",
+                              "SeedSequence") and not (node.args
+                                                       or node.keywords):
+                    yield self.finding(
+                        ctx, node,
+                        f"`np.random.{tail}()` without a seed is "
+                        f"entropy-seeded — pass an explicit seed so "
+                        f"runs replay bit-for-bit")

@@ -1,0 +1,245 @@
+"""RPL003 jit-donation: donated buffers are dead; sharded jits declare
+their output placement.
+
+Two sub-checks over every ``jax.jit`` site:
+
+1. **Use-after-donate.**  ``donate_argnums`` hands the argument's
+   buffer to XLA — reading the Python reference afterwards hits a
+   deleted array.  The rule registers every jitted callable built with
+   ``donate_argnums`` (both ``fn = jax.jit(...)`` locals and
+   ``self._fn = jax.jit(...)`` executor attributes, matched across
+   methods of the same class), then flags any read of a donated
+   argument's name after the call site in the same function scope,
+   unless the name was reassigned in between.  The repo idiom —
+   rebinding at the call site,
+   ``(self._cache, ...) = self._decode(self.params, self._cache, ...)``
+   — clears the taint by construction.  Line-order analysis: a
+   *loop-carried* read is only safe when the donating call rebinds the
+   name, which is the only loop pattern in the tree.
+
+2. **out_shardings under a mesh.**  A jitted program compiled in a
+   class that owns a ``self.mesh`` must pin ``out_shardings``: without
+   it GSPMD is free to choose output layouts, and a donated slot-cache
+   buffer that comes back with a different sharding forces a silent
+   full-buffer reshard every decode chunk (the PR 3/4 executors pin
+   all five programs).  Scoped by the ``out_shardings_include`` paths
+   — the dry-run harness jits ShapeDtypeStruct spec stand-ins where
+   shardings ride the arguments instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.base import Finding, Rule
+from repro.analysis.walker import (assigned_names, dotted_name, qualified,
+                                   walk_scope)
+
+
+def _jit_call(node: ast.AST, imports) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` Call if ``node`` is one."""
+    if (isinstance(node, ast.Call)
+            and qualified(dotted_name(node.func), imports) == "jax.jit"):
+        return node
+    return None
+
+
+def _donated_positions(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return tuple(e.value for e in v.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+    return ()
+
+
+def _has_kw(call: ast.Call, name: str) -> bool:
+    return any(kw.arg == name for kw in call.keywords)
+
+
+def _stmt_targets(stmt: ast.stmt) -> List[str]:
+    if isinstance(stmt, ast.Assign):
+        out: List[str] = []
+        for t in stmt.targets:
+            out.extend(assigned_names(t))
+        return out
+    if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        return assigned_names(stmt.target)
+    return []
+
+
+class _Scope:
+    """Ordered loads / stores / donating-call taints of one scope."""
+
+    def __init__(self, fn: ast.AST, registry: Dict[str, Tuple[int, ...]],
+                 imports: Dict[str, str]):
+        self.loads: List[Tuple[str, int, ast.AST]] = []
+        self.stores: List[Tuple[str, int]] = []
+        # (donated dotted name, donating statement end line, call node)
+        self.taints: List[Tuple[str, int, ast.Call]] = []
+        self._registry = registry
+        self._imports = imports
+        for stmt in getattr(fn, "body", []):
+            self._visit(stmt, stmt)
+
+    def _visit(self, node: ast.AST, stmt: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            return      # nested scope
+        if isinstance(node, ast.stmt):
+            stmt = node
+            end = getattr(node, "end_lineno", node.lineno)
+            self.stores.extend((n, end) for n in _stmt_targets(node))
+            if isinstance(node, ast.For):
+                self.stores.extend(
+                    (n, node.lineno) for n in assigned_names(node.target))
+            elif isinstance(node, ast.With):
+                for item in node.items:
+                    if item.optional_vars is not None:
+                        self.stores.extend(
+                            (n, node.lineno)
+                            for n in assigned_names(item.optional_vars))
+        if isinstance(node, ast.NamedExpr):
+            self.stores.extend(
+                (n, node.lineno) for n in assigned_names(node.target))
+        if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(node, "ctx", None), ast.Load):
+            d = dotted_name(node)
+            if d:
+                # record the full chain only; taint matching treats a
+                # read of `x.y` as a read of donated `x`
+                self.loads.append((d, node.lineno, node))
+                return
+        if isinstance(node, ast.Call):
+            self._maybe_taint(node, stmt)
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, stmt)
+
+    def _maybe_taint(self, call: ast.Call, stmt: ast.stmt) -> None:
+        pos = self._registry.get(dotted_name(call.func) or "")
+        direct = _jit_call(call.func, self._imports)
+        if direct is not None:
+            pos = _donated_positions(direct)
+        if not pos:
+            return
+        end = getattr(stmt, "end_lineno", stmt.lineno)
+        rebound = _stmt_targets(stmt)
+        for p in pos:
+            if p >= len(call.args):
+                continue
+            d = dotted_name(call.args[p])
+            if d and d not in rebound:
+                self.taints.append((d, end, call))
+
+
+def _matches(load: str, donated: str) -> bool:
+    return load == donated or load.startswith(donated + ".")
+
+
+class JitDonationRule(Rule):
+    id = "RPL003"
+    name = "jit-donation"
+    summary = ("donated jit argument read after the call / mesh-scoped "
+               "jit missing out_shardings")
+
+    def check(self, ctx) -> Iterator[Finding]:
+        if "jax.jit" not in ctx.source:
+            return
+        yield from self._use_after_donate(ctx)
+        inc = self.options.get("out_shardings_include", [])
+        if not inc or any(f in ctx.path for f in inc):
+            yield from self._out_shardings(ctx)
+
+    # -- sub-check 1: use-after-donate ---------------------------------
+
+    def _use_after_donate(self, ctx) -> Iterator[Finding]:
+        # class-level registry: `self._fn = jax.jit(..., donate...)`
+        # anywhere in a class taints `self._fn(...)` call sites in
+        # every method of that class
+        scopes: List[Tuple[ast.AST, Dict[str, Tuple[int, ...]]]] = []
+        claimed = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            reg: Dict[str, Tuple[int, ...]] = {}
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign):
+                    jc = _jit_call(sub.value, ctx.imports)
+                    if jc is None:
+                        continue
+                    pos = _donated_positions(jc)
+                    if not pos:
+                        continue
+                    for t in sub.targets:
+                        d = dotted_name(t)
+                        if d:
+                            reg[d] = pos
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    scopes.append((sub, reg))
+                    claimed.add(id(sub))
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and id(node) not in claimed):
+                scopes.append((node, {}))
+        scopes.append((ctx.tree, {}))
+
+        for fn, class_reg in scopes:
+            registry = dict(class_reg)
+            for sub in walk_scope(fn):
+                if isinstance(sub, ast.Assign):
+                    jc = _jit_call(sub.value, ctx.imports)
+                    if jc is not None:
+                        pos = _donated_positions(jc)
+                        if pos:
+                            for t in sub.targets:
+                                d = dotted_name(t)
+                                if d:
+                                    registry[d] = pos
+            scope = _Scope(fn, registry, ctx.imports)
+            for name, tline, call in scope.taints:
+                offender = None
+                for lname, lline, lnode in scope.loads:
+                    if not _matches(lname, name) or lline <= tline:
+                        continue
+                    if any(sname == name and tline < sline < lline
+                           for sname, sline in scope.stores):
+                        continue
+                    if offender is None or lline < offender[0]:
+                        offender = (lline, lnode)
+                if offender is not None:
+                    yield self.finding(
+                        ctx, offender[1],
+                        f"`{name}` was donated to the jitted call at "
+                        f"line {call.lineno} (donate_argnums) — its "
+                        f"buffer is gone; rebind the name from the "
+                        f"call's results or drop the donation")
+
+    # -- sub-check 2: out_shardings under a mesh ------------------------
+
+    def _out_shardings(self, ctx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            owns_mesh = any(
+                isinstance(sub, ast.Assign) and any(
+                    dotted_name(t) == "self.mesh" for t in sub.targets)
+                for sub in ast.walk(node))
+            if not owns_mesh:
+                continue
+            for sub in ast.walk(node):
+                jc = _jit_call(sub, ctx.imports) if isinstance(
+                    sub, ast.Call) else None
+                if jc is not None and not _has_kw(jc, "out_shardings"):
+                    yield self.finding(
+                        ctx, jc,
+                        f"jax.jit in class `{node.name}` (owns "
+                        f"self.mesh) without out_shardings — GSPMD "
+                        f"picks output layouts freely and donated "
+                        f"buffers can come back resharded; pin the "
+                        f"NamedSharding like the executors do")

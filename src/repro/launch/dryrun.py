@@ -160,15 +160,15 @@ def build_step(arch: str, shape_name: str, mesh, *, mla_absorb=False,
 def run_one(arch: str, shape_name: str, mesh_kind: str, **kw):
     multi = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi)
-    t0 = time.time()
+    t0 = time.perf_counter()
     shlib.FALLBACK_LOG.clear()
     fn, args, info = build_step(arch, shape_name, mesh, **kw)
     info.update({k: v for k, v in kw.items() if v})
     with mesh:
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         coll, coll_counts = collective_bytes(compiled.as_text())

@@ -52,14 +52,14 @@ def main():
     ds = LMDataset(cfg, args.seq)
     it = ds.batches(args.batch)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = []
     for step in range(1, args.steps + 1):
         batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == 1:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"step {step:5d}  loss {np.mean(losses[-args.log_every:]):.4f}"
                   f"  grad_norm {float(metrics['grad_norm']):.3f}"
                   f"  lr {float(metrics['lr']):.2e}  {dt:.1f}s")

@@ -83,6 +83,10 @@ class GatewayStats:
     timed_out: int = 0
     retries: int = 0
     faulted: int = 0
+    # serving-thread deaths / failed shutdown drains (AsyncGateway) —
+    # the gateway has already failed by then, but the death itself must
+    # be visible on a dashboard, not only as a dead thread
+    fatal_errors: int = 0
     total_reward: float = 0.0
     # mirrors of the backend's shared retrieval LRU counters (0/0 when
     # the backend serves uncached) — repeated queries in a stream stop

@@ -518,11 +518,14 @@ class AsyncGateway(Gateway):
                 except Exception:
                     # pump already marked the gateway failed and
                     # rejected every handle; a dead thread must not
-                    # keep "serving"
+                    # keep "serving" — but the death must be countable
+                    with self._lock:
+                        self.stats.fatal_errors += 1
                     return
                 if n == 0:
                     # nothing arrived and nothing finished: yield the
                     # GIL briefly rather than spinning
+                    # repro: allow[RPL001] idle GIL yield on the real serving thread; virtual-time tests drive pump() directly
                     time.sleep(idle_sleep_s)
 
         self._thread = threading.Thread(target=loop, name="async-gateway",
@@ -543,10 +546,16 @@ class AsyncGateway(Gateway):
                         try:
                             n = self.pump()
                         except Exception:
-                            break      # handles already rejected
+                            # handles already rejected by _fail; count
+                            # the failed drain so shutdown isn't silent
+                            with self._lock:
+                                self.stats.fatal_errors += 1
+                            break
                         if n == 0:
+                            # repro: allow[RPL001] real-time drain pacing at shutdown; virtual-time paths use drain_stream()
                             time.sleep(1e-3)
                     break
+                # repro: allow[RPL001] real-time drain pacing at shutdown; virtual-time paths use drain_stream()
                 time.sleep(1e-3)
         self._stop.set()
         if self._thread is not None:

@@ -317,10 +317,12 @@ class LoadGenerator:
             for arr in self.trace:
                 lag = arr.t - (time.perf_counter() - t0)
                 if lag > 0:
+                    # repro: allow[RPL001] real-time pacing IS this method's contract; run() replays on the virtual clock
                     time.sleep(lag)
                 handles.append(gw.submit_stream(arr.request))
             deadline = time.perf_counter() + timeout_s
             while gw.in_flight and time.perf_counter() < deadline:
+                # repro: allow[RPL001] real-time pacing IS this method's contract; run() replays on the virtual clock
                 time.sleep(1e-3)
         finally:
             gw.stop(drain=False)

@@ -1,0 +1,8 @@
+"""A module no rule should flag."""
+import time
+
+
+def measure(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0

@@ -1,0 +1,27 @@
+"""RPL001 fixture: wall-clock calls vs the injectable seam."""
+import time
+from datetime import datetime
+
+
+def bad_wall_clock():
+    t0 = time.time()            # finding: wall-clock timestamp
+    time.sleep(0.1)             # finding: wall-clock sleep
+    now = datetime.now()        # finding: wall-clock timestamp
+    return t0, now
+
+
+def good_interval():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0
+
+
+def good_seam(sleep=None):
+    # referencing time.sleep without calling it IS the seam
+    do_sleep = sleep or time.sleep
+    return do_sleep
+
+
+def suppressed_ok():
+    # repro: allow[RPL001] fixture: preceding-line suppression
+    time.sleep(0.001)
+    time.sleep(0.002)  # repro: allow[RPL001] fixture: inline suppression

@@ -1,0 +1,17 @@
+"""RPL002 fixture: unseeded global RNG vs seeded generators."""
+import random
+
+import numpy as np
+
+
+def bad_global_rng():
+    a = random.random()              # finding: stdlib global RNG
+    b = np.random.rand(3)            # finding: numpy legacy global
+    np.random.seed(0)                # finding: global seeding IS the bug
+    rng = np.random.default_rng()    # finding: entropy-seeded
+    return a, b, rng
+
+
+def good_seeded(seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=3)        # instance method: fine

@@ -1,0 +1,50 @@
+"""RPL003 fixture: use-after-donate and mesh/out_shardings cases."""
+import jax
+
+
+def train_step(params, opt_state, batch):
+    return params, opt_state, {}
+
+
+def bad_use_after_donate(params, opt_state, batch):
+    step = jax.jit(train_step, donate_argnums=(0, 1))
+    new_params, new_opt = step(params, opt_state, batch)
+    return params.mean()             # finding: params was donated
+
+
+def good_rebind(params, opt_state, batch):
+    step = jax.jit(train_step, donate_argnums=(0, 1))
+    params, opt_state = step(params, opt_state, batch)
+    return params                    # rebound at the call site: fine
+
+
+def good_store_between(params, opt_state, batch):
+    step = jax.jit(train_step, donate_argnums=(0, 1))
+    out, _ = step(params, opt_state, batch), None
+    params = out[0]
+    return params                    # reassigned before the read: fine
+
+
+class BadExecutor:
+    """Donated-callable registry crosses methods; mesh without
+    out_shardings."""
+
+    def __init__(self, mesh, decode_fn):
+        self.mesh = mesh
+        # finding (out_shardings): class owns self.mesh, jit unpinned
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    def decode(self, params, cache):
+        out, cache2 = self._decode(params, cache)
+        return cache.pos             # finding: cache was donated
+
+
+class GoodExecutor:
+    def __init__(self, mesh, decode_fn, shardings):
+        self.mesh = mesh
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,),
+                               out_shardings=shardings)
+
+    def decode(self, params, cache):
+        out, cache = self._decode(params, cache)
+        return cache.pos             # rebound: fine

@@ -1,0 +1,77 @@
+"""RPL004 fixture: VMEM budget, unbound dims, masked tails.
+
+Parsed, never executed — the names only need to typecheck as AST.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_kernel(x_ref, o_ref, *, block: int, n: int):
+    pos = jax.lax.broadcasted_iota(jnp.int32, (8, block), 1)
+    o_ref[...] = jnp.where(pos < n, x_ref[...], 0.0)
+
+
+def _outer_kernel(x_ref, o_ref, *, block: int, n: int):
+    # the mask lives one call down — requires transitive following
+    _masked_kernel(x_ref, o_ref, block=block, n=n)
+
+
+def _unmasked_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def ok_small_masked(x):
+    # ~16 KiB working set; kernel masks its tail via iota
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=(x.shape[1] // 128,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)
+
+
+def ok_transitive_mask(x):
+    # iota is inside a helper the kernel calls
+    return pl.pallas_call(
+        _outer_kernel,
+        grid=(x.shape[1] // 128,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)
+
+
+def ok_divisibility_assert(x):
+    assert x.shape[0] % 4096 == 0
+    return pl.pallas_call(
+        _unmasked_kernel,
+        grid=(x.shape[0] // 4096,),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)
+
+
+def bad_over_budget_and_unmasked(x):
+    # (4096*1024 in + 4096*1024 out) * 4 B * 2 buffers = 64 MiB >> 16;
+    # AND the kernel has no iota mask, the wrapper no divisibility
+    # assert -> two findings on this call
+    return pl.pallas_call(
+        _unmasked_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((4096, 1024), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 1024), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16384, 1024), jnp.float32),
+    )(x)
+
+
+def bad_unbound_dim(x, mystery_dim):
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((mystery_dim, 128), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)

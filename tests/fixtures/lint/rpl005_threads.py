@@ -1,0 +1,40 @@
+"""RPL005 fixture: cross-thread writes with and without the lock."""
+import threading
+
+
+class BadWorker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.done = False
+
+    def start(self):
+        def loop():
+            while not self.done:
+                self.count += 1      # finding: unlocked, shared
+        self._t = threading.Thread(target=loop)
+        self._t.start()
+
+    def bump(self):
+        self.count += 1              # finding: unlocked, shared
+
+    def stop(self):
+        self.done = True             # thread only READS done: fine
+
+
+class GoodWorker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def _run(self):
+        with self._lock:
+            self.count += 1
+
+    def start(self):
+        self._t = threading.Thread(target=self._run)
+        self._t.start()
+
+    def bump(self):
+        with self._lock:
+            self.count += 1

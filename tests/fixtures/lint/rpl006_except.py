@@ -1,0 +1,53 @@
+"""RPL006 fixture: broad handlers, compliant and not."""
+
+
+def risky(x):
+    return x
+
+
+def bad_swallow(x):
+    try:
+        return risky(x)
+    except Exception:                # finding: silently swallowed
+        return None
+
+
+def bad_bare(x):
+    try:
+        return risky(x)
+    except:                          # noqa: E722  finding: bare except
+        pass
+
+
+def good_reraise(x):
+    try:
+        return risky(x)
+    except Exception as exc:
+        raise RuntimeError("mapped into the taxonomy") from exc
+
+
+def good_counter(stats, x):
+    try:
+        return risky(x)
+    except Exception:
+        stats.errors += 1            # counted: fine
+        return None
+
+
+def good_record(log, x):
+    try:
+        return risky(x)
+    except Exception as exc:
+        record_failure(log, exc)     # recorded: fine
+        return None
+
+
+def record_failure(log, exc):
+    log.append(exc)
+
+
+def good_narrow(x):
+    try:
+        return risky(x)
+    except KeyError:                 # narrow catch is intent: fine
+        return None

@@ -1,0 +1,16 @@
+"""Suppression-parsing fixture: valid, multi-rule, and bare allows."""
+import random
+import time
+
+
+def bare_allow_is_reported():
+    time.sleep(0.1)  # repro: allow[RPL001]
+
+
+def multi_rule_allow():
+    # repro: allow[RPL001,RPL002] fixture: one comment, two rules
+    return time.time() + random.random()
+
+
+def wrong_rule_does_not_suppress():
+    time.sleep(0.1)  # repro: allow[RPL006] wrong id: RPL001 still fires

@@ -1,0 +1,86 @@
+"""Meta-test: the merged tree itself is lint-clean, via the exact
+invocation CI runs, plus CLI behaviour (exit codes, formats, --rules).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.cli import main
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+
+def test_src_tree_has_zero_unsuppressed_findings():
+    """The CI gate: ``python -m repro.analysis src --fail-on-findings``
+    exits 0 on the repo's own source with all six rules active."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src",
+         "--fail-on-findings", "--format", "json"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(proc.stdout)
+    assert data["findings"] == []
+    assert data["n_files"] > 50
+    # the allow-list is auditable: every suppression carries a reason
+    assert all(f["suppress_reason"] for f in data["suppressed"])
+
+
+def test_cli_exit_1_on_findings_with_flag(capsys):
+    rc = main([str(FIXTURES / "rpl001_clock.py"), "--fail-on-findings"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "RPL001" in out and "findings" in out
+
+
+def test_cli_exit_0_without_flag(capsys):
+    rc = main([str(FIXTURES / "rpl001_clock.py")])
+    assert rc == 0
+    assert "RPL001" in capsys.readouterr().out
+
+
+def test_cli_rules_filter(capsys):
+    rc = main([str(FIXTURES / "rpl001_clock.py"), "--rules", "RPL002",
+               "--fail-on-findings"])
+    assert rc == 0              # RPL001 disabled, nothing else fires
+    with pytest.raises(SystemExit):
+        main([str(FIXTURES / "rpl001_clock.py"), "--rules", "RPL999"])
+
+
+def test_cli_json_schema(capsys):
+    rc = main([str(FIXTURES / "rpl001_clock.py"), "--format", "json"])
+    assert rc == 0
+    data = json.loads(capsys.readouterr().out)
+    assert set(data) == {"n_files", "counts", "findings", "suppressed"}
+    assert data["counts"].get("RPL001", 0) == 3
+    for f in data["findings"] + data["suppressed"]:
+        assert set(f) == {"rule", "path", "line", "col", "message",
+                          "severity", "suppressed", "suppress_reason"}
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("RPL001", "RPL002", "RPL003", "RPL004", "RPL005",
+                "RPL006"):
+        assert rid in out
+
+
+def test_cli_budget_override_flag(capsys):
+    # a 0.001 MiB budget makes every kernel site over-budget
+    rc = main([str(REPO / "src" / "repro" / "kernels"),
+               "--budget-mib", "0.001", "--rules", "RPL004",
+               "--fail-on-findings"])
+    assert rc == 1
+    assert "exceeds" in capsys.readouterr().out
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,229 @@
+"""Fixture tests for every reprolint rule: each rule's true positives
+fire, its negatives stay quiet, and suppressions parse.
+
+The fixture files live under ``tests/fixtures/lint/`` and are parsed,
+never imported.  DEFAULT_CONFIG path-scopes several rules to repo
+subtrees the fixtures are outside of, so these tests build an
+everywhere-enabled config; the DEFAULT_CONFIG contract on the real tree
+is covered by the meta-test in ``test_lint_meta.py``.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import LintConfig, run_lint
+from repro.analysis.base import all_rules
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "lint"
+
+
+def everywhere_config() -> LintConfig:
+    cfg = LintConfig()
+    for rid in all_rules():
+        cfg.rule(rid)          # default RuleConfig: enabled, no scoping
+    return cfg
+
+
+def lint(name: str):
+    return run_lint([str(FIXTURES / name)], config=everywhere_config())
+
+
+def by_rule(result, rule):
+    return [f for f in result.findings if f.rule == rule]
+
+
+def src_line(name: str, lineno: int) -> str:
+    return (FIXTURES / name).read_text().splitlines()[lineno - 1]
+
+
+def test_registry_has_all_six_rules():
+    assert sorted(all_rules()) == [
+        "RPL001", "RPL002", "RPL003", "RPL004", "RPL005", "RPL006"]
+
+
+def test_clean_fixture_has_no_findings():
+    res = lint("clean.py")
+    assert res.findings == [] and res.suppressed == []
+
+
+# -- RPL001 clock-discipline ------------------------------------------------
+
+
+def test_rpl001_flags_wall_clock_calls():
+    res = lint("rpl001_clock.py")
+    hits = by_rule(res, "RPL001")
+    assert len(hits) == 3
+    srcs = [src_line("rpl001_clock.py", f.line) for f in hits]
+    assert any("time.time()" in s for s in srcs)
+    assert any("time.sleep(0.1)" in s for s in srcs)
+    assert any("datetime.now()" in s for s in srcs)
+    # perf_counter and the un-called seam reference stay quiet
+    assert not any("perf_counter" in s or "sleep or" in s for s in srcs)
+
+
+def test_rpl001_suppressions_inline_and_preceding():
+    res = lint("rpl001_clock.py")
+    sup = [f for f in res.suppressed if f.rule == "RPL001"]
+    assert len(sup) == 2
+    assert {f.suppress_reason for f in sup} == {
+        "fixture: preceding-line suppression",
+        "fixture: inline suppression"}
+
+
+# -- RPL002 determinism -----------------------------------------------------
+
+
+def test_rpl002_flags_global_rng_not_seeded_instances():
+    res = lint("rpl002_rng.py")
+    hits = by_rule(res, "RPL002")
+    srcs = [src_line("rpl002_rng.py", f.line) for f in hits]
+    assert len(hits) == 4
+    assert any("random.random()" in s for s in srcs)
+    assert any("np.random.rand" in s for s in srcs)
+    assert any("np.random.seed" in s for s in srcs)
+    assert any("default_rng()" in s for s in srcs)
+    assert not any("default_rng(seed)" in s for s in srcs)
+
+
+# -- RPL003 jit-donation ----------------------------------------------------
+
+
+def test_rpl003_use_after_donate_and_out_shardings():
+    res = lint("rpl003_donate.py")
+    hits = by_rule(res, "RPL003")
+    assert len(hits) == 3
+    donated = [f for f in hits if "was donated" in f.message]
+    mesh = [f for f in hits if "out_shardings" in f.message]
+    assert len(donated) == 2 and len(mesh) == 1
+    donated_srcs = [src_line("rpl003_donate.py", f.line) for f in donated]
+    assert any("params.mean()" in s for s in donated_srcs)
+    assert any("cache.pos" in s for s in donated_srcs)
+    # the cross-method finding names the donated argument
+    assert any("`cache`" in f.message for f in donated)
+    assert "jax.jit(decode_fn" in src_line("rpl003_donate.py",
+                                           mesh[0].line)
+
+
+def test_rpl003_rebind_and_store_clear_taint():
+    res = lint("rpl003_donate.py")
+    srcs = [src_line("rpl003_donate.py", f.line)
+            for f in by_rule(res, "RPL003")]
+    # neither good_rebind's return nor GoodExecutor's read is flagged
+    assert not any(s.strip() == "return params" for s in srcs)
+    assert sum("cache.pos" in s for s in srcs) == 1
+
+
+# -- RPL004 pallas-vmem-budget ----------------------------------------------
+
+
+def test_rpl004_budget_unbound_and_masked_tail():
+    res = lint("rpl004_vmem.py")
+    hits = by_rule(res, "RPL004")
+    assert len(hits) == 3
+    over = [f for f in hits if "exceeds" in f.message]
+    unbound = [f for f in hits if "mystery_dim" in f.message]
+    tail = [f for f in hits if "non-divisible" in f.message]
+    assert len(over) == 1 and len(unbound) == 1 and len(tail) == 1
+    # budget + tail findings both anchor on the same bad pallas_call
+    assert over[0].line == tail[0].line
+    assert tail[0].message.startswith("kernel `_unmasked_kernel`")
+
+
+def test_rpl004_transitive_iota_and_assert_satisfy_tail_check():
+    res = lint("rpl004_vmem.py")
+    tail = [f for f in by_rule(res, "RPL004")
+            if "non-divisible" in f.message]
+    # ok_transitive_mask (helper-call iota) and ok_divisibility_assert
+    # produced no tail findings — only the unmasked one did
+    assert len(tail) == 1
+
+
+# -- RPL005 thread-shared-state ---------------------------------------------
+
+
+def test_rpl005_flags_unlocked_shared_writes_only():
+    res = lint("rpl005_threads.py")
+    hits = by_rule(res, "RPL005")
+    assert len(hits) == 2
+    assert all("self.count" in f.message for f in hits)
+    srcs = [src_line("rpl005_threads.py", f.line) for f in hits]
+    assert all("self.count += 1" in s for s in srcs)
+    # the single-writer `done` flag and GoodWorker's locked writes pass
+    assert not any("done" in f.message for f in hits)
+
+
+# -- RPL006 exception-hygiene -----------------------------------------------
+
+
+def test_rpl006_flags_swallowing_handlers_only():
+    res = lint("rpl006_except.py")
+    hits = by_rule(res, "RPL006")
+    assert len(hits) == 2
+    srcs = [src_line("rpl006_except.py", f.line) for f in hits]
+    assert any("except Exception:" in s for s in srcs)
+    assert any(s.strip().startswith("except:") for s in srcs)
+
+
+# -- suppression machinery --------------------------------------------------
+
+
+def test_bare_allow_is_reported_and_does_not_suppress():
+    res = lint("suppressions.py")
+    errs = by_rule(res, "RPLERR")
+    assert len(errs) == 1 and "no reason" in errs[0].message
+    # the RPL001 finding on that same line is still active
+    assert any(f.rule == "RPL001" and f.line == errs[0].line
+               for f in res.findings)
+
+
+def test_multi_rule_allow_suppresses_both_ids():
+    res = lint("suppressions.py")
+    sup_rules = {f.rule for f in res.suppressed}
+    assert {"RPL001", "RPL002"} <= sup_rules
+    assert all(f.suppress_reason == "fixture: one comment, two rules"
+               for f in res.suppressed)
+
+
+def test_wrong_rule_id_does_not_suppress():
+    res = lint("suppressions.py")
+    line = next(i + 1 for i, s in enumerate(
+        (FIXTURES / "suppressions.py").read_text().splitlines())
+        if "wrong id" in s)
+    assert any(f.rule == "RPL001" and f.line == line
+               for f in res.findings)
+
+
+def test_path_scoping_include_exclude():
+    cfg = everywhere_config()
+    cfg.rule("RPL001").include = ("no/such/fragment",)
+    res = run_lint([str(FIXTURES / "rpl001_clock.py")], config=cfg)
+    assert by_rule(res, "RPL001") == []
+    cfg2 = everywhere_config()
+    cfg2.rule("RPL001").exclude = ("fixtures/lint",)
+    res2 = run_lint([str(FIXTURES / "rpl001_clock.py")], config=cfg2)
+    assert by_rule(res2, "RPL001") == []
+
+
+def test_syntax_error_reports_rplerr(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    res = run_lint([str(bad)], config=everywhere_config())
+    assert [f.rule for f in res.findings] == ["RPLERR"]
+    assert "syntax error" in res.findings[0].message
+
+
+def test_config_overlay_disables_and_retargets():
+    cfg = everywhere_config().overlay({"rules": {
+        "RPL001": {"enabled": False},
+        "RPL004": {"options": {"budget_bytes": 1}},
+    }})
+    assert not cfg.rule("RPL001").enabled
+    assert cfg.rule("RPL004").options["budget_bytes"] == 1
+    res = run_lint([str(FIXTURES / "rpl001_clock.py")], config=cfg)
+    assert by_rule(res, "RPL001") == []
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
