@@ -45,6 +45,7 @@ from repro.core.config import RetrievalConfig
 from repro.data.synthetic_squad import SyntheticSquad
 from repro.data.tokenizer import HashTokenizer
 from repro.models import build_model
+from repro.obs import MetricsRegistry, Tracer
 from repro.retrieval.bm25 import BM25Index
 from repro.retrieval.hybrid import IndexRetriever
 from repro.routing import FixedPolicy
@@ -124,7 +125,10 @@ def run_scenario(model, mcfg, params, data, plan: FaultPlan,
         state_fn=lambda qs: np.zeros((len(qs), 1)),
         clock=clock.now, deadline_ms=DEADLINE_MS,
         admission=AdmissionConfig(max_backlog=4 * NUM_SLOTS),
-        retry=RetryPolicy(max_retries=2, backoff_s=0.02))
+        retry=RetryPolicy(max_retries=2, backoff_s=0.02),
+        # telemetry plane on the scenario's virtual clock — each row
+        # gains a trace-derived "stages" per-stage p50/p99 table
+        tracer=Tracer(clock.now), metrics=MetricsRegistry(clock.now))
     trace = build_trace(data.questions, PoissonProcess(RATE, seed=0),
                         n_requests, deadline_ms=DEADLINE_MS)
     gen = LoadGenerator(gw, trace)
@@ -187,6 +191,12 @@ def main(quick: bool = False) -> dict:
         and base["faulted"] == 0, base
     burst = out["scenarios"]["executor_fault_burst"]
     assert burst["goodput"] > 0, burst
+    # headline per-stage latency table (healthy scenario) + the
+    # telemetry plane's measured hot-path cost
+    out["stage_breakdown"] = base.get("stages", {})
+    from benchmarks.serving_bench import tracer_overhead_row
+    out["tracer_overhead"] = tracer_overhead_row(
+        repeats=5 if quick else 7)
     save_artifact("BENCH_chaos", out)
     (Path(__file__).resolve().parents[1] / "BENCH_chaos.json").write_text(
         json.dumps(out, indent=1))

@@ -254,6 +254,7 @@ def run_open_loop(model, mcfg, params, rates=OPEN_LOOP_RATES,
     the backend's ContinuousEngine (e.g. ``paged=True``)."""
     import numpy as _np
     from repro.core.config import RetrievalConfig as _RC
+    from repro.obs import MetricsRegistry, Tracer
     from repro.routing import FixedPolicy
     from repro.routing.engine_backend import ContinuousEngineBackend
     from repro.serving.streaming import AdmissionConfig, AsyncGateway
@@ -269,11 +270,14 @@ def run_open_loop(model, mcfg, params, rates=OPEN_LOOP_RATES,
             num_slots=NUM_SLOTS, max_prompt_len=MAX_PROMPT,
             max_new_tokens=8, sync_every=SYNC_EVERY, clock=clock.now,
             **(engine_kw or {}))
+        # telemetry plane on the same virtual clock: each row's
+        # "stages" key is the trace-derived per-stage p50/p99 table
         return AsyncGateway(
             FixedPolicy(1), backend,
             state_fn=lambda qs: _np.zeros((len(qs), 1)),
             clock=clock.now, deadline_ms=OPEN_LOOP_DEADLINE_MS,
-            admission=AdmissionConfig(max_backlog=3 * NUM_SLOTS))
+            admission=AdmissionConfig(max_backlog=3 * NUM_SLOTS),
+            tracer=Tracer(clock.now), metrics=MetricsRegistry(clock.now))
 
     rows = sweep_offered_load(
         make_gateway, data.questions, list(rates),
@@ -288,10 +292,73 @@ def run_open_loop(model, mcfg, params, rates=OPEN_LOOP_RATES,
         "num_slots": NUM_SLOTS, "arrival": "poisson(seed=0)",
         "service_quantum_s": OPEN_LOOP_QUANTUM_S,
         "rows": rows,
+        # trace-derived per-stage latency at the comfortable operating
+        # point (stage -> {n, p50_ms, p99_ms} of virtual time)
+        "stage_breakdown": rows[min(1, len(rows) - 1)].get("stages", {}),
         # headline: shedding engages under over-offered load
         "shed_at_max_rate": rows[-1]["shed"],
         "shed_at_min_rate": rows[0]["shed"],
     }
+
+
+def tracer_overhead_row(repeats: int = 7, n_requests: int = 400) -> dict:
+    """Hot-path cost of the telemetry plane: the same seeded open-loop
+    replay through the host-only simulator backend, once with a live
+    Tracer + MetricsRegistry attached and once with the no-op defaults,
+    best-of-N REAL wall each.  Virtual time pins the schedule (same
+    pumps, same admissions, token-identical outcomes), so the wall
+    difference is pure instrumentation cost — asserted within 5%."""
+    from repro.core.config import RetrievalConfig as _RC
+    from repro.generation.simulator import SimulatedGenerator
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.routing import FixedPolicy
+    from repro.routing.backends import SimulatorBackend
+    from repro.serving.pipeline import RAGPipeline
+    from repro.serving.streaming import AdmissionConfig, AsyncGateway
+    from repro.serving.traffic import (LoadGenerator, PoissonProcess,
+                                       VirtualClock, build_trace)
+
+    data = SyntheticSquad(n_paragraphs=120, n_questions=24, seed=0)
+    index = BM25Index.build([p.text for p in data.paragraphs],
+                            _RC(vocab_hash_dim=1024))
+    tok = HashTokenizer(512)
+
+    def one_run(traced: bool) -> float:
+        clock = VirtualClock()
+        pipe = RAGPipeline(index, SimulatedGenerator(tok))
+        backend = SimulatorBackend(pipe, stream_slots=NUM_SLOTS,
+                                   service_polls=2, clock=clock.now)
+        kw = ({"tracer": Tracer(clock.now),
+               "metrics": MetricsRegistry(clock.now)} if traced else {})
+        gw = AsyncGateway(
+            FixedPolicy(1), backend,
+            state_fn=lambda qs: np.zeros((len(qs), 1)),
+            clock=clock.now, deadline_ms=OPEN_LOOP_DEADLINE_MS,
+            admission=AdmissionConfig(max_backlog=3 * NUM_SLOTS), **kw)
+        trace = build_trace(data.questions, PoissonProcess(200.0, seed=0),
+                            n_requests, deadline_ms=OPEN_LOOP_DEADLINE_MS)
+        t0 = time.perf_counter()
+        LoadGenerator(gw, trace).run_virtual(
+            clock, service_quantum_s=OPEN_LOOP_QUANTUM_S)
+        return time.perf_counter() - t0
+
+    one_run(False)
+    one_run(True)                                   # warmup both paths
+    # interleave so both paths sample the same noise windows (shared-
+    # container CPU), best-of-N each
+    base, traced = 9e9, 9e9
+    for _ in range(repeats):
+        base = min(base, one_run(False))
+        traced = min(traced, one_run(True))
+    pct = round((traced - base) / base * 100.0, 2)
+    row = {"base_wall_s": round(base, 4),
+           "traced_wall_s": round(traced, 4),
+           "tracer_overhead_pct": pct,
+           "repeats": repeats, "n_requests": n_requests}
+    print(f"tracer overhead: {pct}% "
+          f"(base {base:.4f}s vs traced {traced:.4f}s, best of {repeats})")
+    assert pct <= 5.0, f"tracer hot-path overhead {pct}% exceeds 5%"
+    return row
 
 
 def _one_device_mesh():
@@ -521,6 +588,8 @@ def main(mesh_probe: str = "dp=8", mp_probe: str = "dp=4,mp=2") -> dict:
         model, mcfg, params, rates=(OPEN_LOOP_RATES[1],),
         engine_kw={"paged": True, "page_size": PAGE_SIZE})
     out["paged"]["open_loop"] = paged_ol["rows"][0]
+    print("# tracer hot-path overhead ...")
+    out["tracer_overhead"] = tracer_overhead_row()
     save_artifact("BENCH_serving", out)
     # the repo-root copy is the perf-trajectory entry point
     (Path(__file__).resolve().parents[1] / "BENCH_serving.json").write_text(
@@ -576,12 +645,14 @@ def open_loop_main() -> dict:
     model = build_model(mcfg)
     params = model.init(jax.random.PRNGKey(0))
     open_loop = run_open_loop(model, mcfg, params)
+    overhead = tracer_overhead_row(repeats=3)
     root = Path(__file__).resolve().parents[1]
     out = {}
     target = root / "BENCH_serving.json"
     if target.exists():
         out = json.loads(target.read_text())
     out["open_loop"] = open_loop
+    out["tracer_overhead"] = overhead
     save_artifact("BENCH_serving", out)
     target.write_text(json.dumps(out, indent=1))
     return open_loop

@@ -15,12 +15,21 @@ in ``ContinuousEngineBackend.create(..., clock=clock.now)`` for the
 real engine (that path is exercised by the serving benchmark's
 open-loop sweep and the loadtest suite).
 
+The last sweep point runs with the telemetry plane attached: a
+``Tracer`` + ``MetricsRegistry`` on the same virtual clock, a Chrome
+trace-event JSON written to ``open_loop_trace.json`` (open in Perfetto
+or chrome://tracing) and the Prometheus exposition to
+``open_loop_metrics.prom`` — the same artifacts
+``python -m repro.launch.serve --open-loop ... --trace-out ...
+--metrics-out ...`` produces.
+
     PYTHONPATH=src python examples/open_loop_serving.py
 """
 import numpy as np
 
 from repro.core.config import RouterConfig, TestbedConfig
 from repro.core.offline_log import build_testbed
+from repro.obs import MetricsRegistry, Tracer
 from repro.routing import (MLPPolicy, SimulatorBackend, get_slo_profile)
 from repro.serving.streaming import AdmissionConfig, AsyncGateway
 from repro.serving.traffic import (LoadGenerator, OnOffProcess,
@@ -28,15 +37,21 @@ from repro.serving.traffic import (LoadGenerator, OnOffProcess,
 
 DEADLINE_MS = 120.0
 N_REQUESTS = 300
+TRACE_OUT = "open_loop_trace.json"
+METRICS_OUT = "open_loop_metrics.prom"
 
 
-def run(policy, cfg, index, pipe, questions, process, label):
+def run(policy, cfg, index, pipe, questions, process, label,
+        telemetry=False):
     clock = VirtualClock()
     backend = SimulatorBackend(pipe, stream_slots=4, service_polls=2,
                                clock=clock.now)
+    tracer = Tracer(clock.now) if telemetry else None
+    metrics = MetricsRegistry(clock.now) if telemetry else None
     gw = AsyncGateway(policy, backend, router_cfg=cfg.router, index=index,
                       clock=clock.now, deadline_ms=DEADLINE_MS,
-                      admission=AdmissionConfig(max_backlog=16))
+                      admission=AdmissionConfig(max_backlog=16),
+                      tracer=tracer, metrics=metrics)
     trace = build_trace(questions, process, N_REQUESTS,
                         deadline_ms=DEADLINE_MS)
     rep = LoadGenerator(gw, trace).run_virtual(clock,
@@ -47,6 +62,19 @@ def run(policy, cfg, index, pipe, questions, process, label):
           f"forced={st.forced_refusals:3d}  clamped={st.depth_clamped:3d}  "
           f"p50={rep.latency.percentile(50):6.1f}ms "
           f"p99={rep.latency.percentile(99):6.1f}ms")
+    if telemetry:
+        with open(TRACE_OUT, "w") as f:
+            f.write(tracer.chrome_trace_json(indent=1))
+        with open(METRICS_OUT, "w") as f:
+            f.write(metrics.exposition())
+        attribution = gw.budget.report_dict().get("latency_attribution", {})
+        print(f"# telemetry: {tracer.n_finished} traced requests, "
+              f"{len(tracer.problems())} trace problems, dominant stage "
+              f"= {attribution.get('dominant_stage', '?')}")
+        for stage, pct in sorted(tracer.stage_percentiles().items()):
+            print(f"#   {stage:11s} n={pct['n']:4d} "
+                  f"p50={pct['p50_ms']:8.2f}ms p99={pct['p99_ms']:8.2f}ms")
+        print(f"# wrote {TRACE_OUT} and {METRICS_OUT}")
 
 
 def main():
@@ -68,6 +96,10 @@ def main():
     run(policy, cfg, index, pipe, qs,
         OnOffProcess(400.0, on_s=0.25, off_s=0.25, seed=0),
         "on-off  mean 200/s")
+    # once more with the telemetry plane attached: per-request span
+    # trees + metrics registry on the same virtual clock
+    run(policy, cfg, index, pipe, qs, PoissonProcess(200.0, seed=0),
+        "poisson 200/s (traced)", telemetry=True)
 
 
 if __name__ == "__main__":

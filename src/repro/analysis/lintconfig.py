@@ -117,6 +117,9 @@ def make_default_config() -> LintConfig:
         # exception silently erodes SLO accounting
         "RPL006": RuleConfig(include=(
             "repro/serving", "repro/retrieval", "repro/routing")),
+        # metric hygiene: names, single registration, injected clocks
+        # (everywhere — bench/launch scripts bind metrics too)
+        "RPL007": RuleConfig(),
     })
 
 

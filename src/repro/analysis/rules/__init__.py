@@ -1,3 +1,4 @@
 """reprolint rule modules — importing this package registers them all."""
 from repro.analysis.rules import (clock, determinism, exceptions,  # noqa: F401
-                                  jit_donation, pallas_vmem, threads)
+                                  jit_donation, metrics_hygiene,
+                                  pallas_vmem, threads)

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -65,8 +66,26 @@ def _continuous_backend(index, mesh_spec, num_slots, retrievers=None,
         retrieval_cache_size=cache_size, **kw)
 
 
+def _dump_telemetry(args, tracer, metrics) -> None:
+    """Write the run's Chrome trace / Prometheus exposition on exit."""
+    if tracer is not None and args.trace_out:
+        with open(args.trace_out, "w") as f:
+            f.write(tracer.chrome_trace_json(indent=1))
+        probs = tracer.problems()
+        print(f"# trace: {args.trace_out} "
+              f"({tracer.n_finished} requests, "
+              f"{len(tracer.sampled_trees)} sampled trees, "
+              f"{len(probs)} problems)")
+        for p in probs[:5]:
+            print(f"#   trace problem: {p}")
+    if metrics is not None and args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.exposition())
+        print(f"# metrics: {args.metrics_out}")
+
+
 def _serve_open_loop(args, policy, backend, cfg, space, index, data,
-                     clock) -> None:
+                     clock, tracer=None, metrics=None) -> None:
     """Open-loop mode: seeded Poisson arrivals through AsyncGateway in
     virtual time, per-request deadlines, SLO-actuated admission."""
     from repro.serving.streaming import AdmissionConfig, AsyncGateway
@@ -77,7 +96,8 @@ def _serve_open_loop(args, policy, backend, cfg, space, index, data,
         policy, backend, router_cfg=cfg.router, index=index,
         action_space=space, adaptive_refusal=args.adaptive,
         clock=clock.now, deadline_ms=args.deadline_ms,
-        admission=AdmissionConfig(max_backlog=4 * args.num_slots))
+        admission=AdmissionConfig(max_backlog=4 * args.num_slots),
+        tracer=tracer, metrics=metrics)
     eval_q = data.questions[-cfg.n_eval:]
     trace = build_trace(eval_q, PoissonProcess(args.open_loop, seed=0),
                         args.n, slo=args.slo, deadline_ms=args.deadline_ms)
@@ -95,6 +115,10 @@ def _serve_open_loop(args, policy, backend, cfg, space, index, data,
         print(f"# engine: prefills={es.n_prefills} "
               f"decode_chunks={es.n_decode_chunks} "
               f"max_concurrent={es.max_concurrent}")
+    if tracer is not None and tracer.enabled:
+        print("# stage percentiles:",
+              json.dumps(tracer.stage_percentiles(), indent=1))
+    _dump_telemetry(args, tracer, metrics)
 
 
 def main():
@@ -132,6 +156,12 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=250.0,
                     help="per-request completion deadline for "
                          "--open-loop (goodput counts answers within it)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "run's metrics registry at exit")
     args = ap.parse_args()
     if args.mesh and args.backend != "continuous":
         ap.error("--mesh requires --backend continuous")
@@ -168,6 +198,12 @@ def main():
     if args.open_loop:
         from repro.serving.traffic import VirtualClock
         clock = VirtualClock()
+    tracer = metrics = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, Tracer
+        obs_clock = clock.now if clock is not None else time.perf_counter
+        tracer = Tracer(obs_clock)
+        metrics = MetricsRegistry(obs_clock)
     if args.backend == "continuous":
         # reuse the suite build_testbed already wired into the pipeline
         # (it embedded the whole corpus once for non-bm25 spaces); the
@@ -187,11 +223,12 @@ def main():
             pipe, **({"clock": clock.now} if clock else {}))
     if args.open_loop:
         _serve_open_loop(args, policy, backend, cfg, space, index, data,
-                         clock)
+                         clock, tracer=tracer, metrics=metrics)
         return
     gateway = Gateway(policy, backend, router_cfg=cfg.router,
                       index=index, max_batch=16, action_space=space,
-                      adaptive_refusal=args.adaptive, on_outcome=report)
+                      adaptive_refusal=args.adaptive, on_outcome=report,
+                      tracer=tracer, metrics=metrics)
 
     eval_q = data.questions[-cfg.n_eval:][: args.n]
     print(f"# serving {args.n} queries under SLO={args.slo} "
@@ -211,6 +248,7 @@ def main():
               f"cache_allocations={es.cache_allocations}")
     print("# error budgets:",
           json.dumps(gateway.budget.report_dict(), indent=1))
+    _dump_telemetry(args, tracer, metrics)
 
     # offline metrics on the logged sweep for the same routed states
     acts = policy.route(eval_log.states[: args.n], args.slo).actions

@@ -375,7 +375,7 @@ def collect_breakers(retrievers: Mapping[str, Retriever]
 
 def retrieve_with_fallback(retrievers: Mapping[str, Retriever],
                            name: str, query: str, k: int, *,
-                           fallback: str = "bm25"
+                           fallback: str = "bm25", tracer=None
                            ) -> Tuple[List[str], bool]:
     """Fetch passages from ``name``, degrading to ``fallback`` when the
     primary fails (open breaker, injected fault, any exception).
@@ -387,23 +387,79 @@ def retrieve_with_fallback(retrievers: Mapping[str, Retriever],
     also fails, the original failure is re-raised wrapped as a
     :class:`~repro.core.errors.TransientFaultError` for the gateway's
     retry path.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`, or None/``NULL_TRACER``)
+    records the lookup as an anonymous ``retrieval`` span — this layer
+    doesn't know the request qid, so the gateway adopts the note onto
+    the request it is submitting (see ``Tracer.note``/``adopt``).
     """
     primary = retrievers[name]
+    t0 = tracer.now() if tracer is not None else 0.0
     try:
-        return primary.passages(query, k), False
+        passages = primary.passages(query, k)
     except Exception as exc:
         fb = retrievers.get(fallback)
         if fb is None or name == fallback:
+            if tracer is not None:
+                tracer.note("retrieval", t0, tracer.now(),
+                            retriever=name, k=k, failed=True)
             if isinstance(exc, TransientFaultError):
                 raise
             raise TransientFaultError(
                 f"retriever {name!r} failed with no fallback: {exc}") from exc
         try:
-            return fb.passages(query, k), True
+            out = fb.passages(query, k), True
         except Exception as fb_exc:
+            if tracer is not None:
+                tracer.note("retrieval", t0, tracer.now(),
+                            retriever=name, k=k, failed=True)
             raise TransientFaultError(
                 f"retriever {name!r} and fallback {fallback!r} both "
                 f"failed: {exc}; {fb_exc}") from fb_exc
+        if tracer is not None:
+            tracer.note("retrieval", t0, tracer.now(),
+                        retriever=name, k=k, degraded=True,
+                        fallback=fallback)
+        return out
+    if tracer is not None:
+        tracer.note("retrieval", t0, tracer.now(), retriever=name, k=k)
+    return passages, False
+
+
+def bind_retrieval_metrics(registry, breakers: Mapping[str, CircuitBreaker],
+                           cache: Optional[RetrievalCache]) -> None:
+    """Register retrieval-plane stats (shared LRU hit counters, per-
+    retriever breaker state/trips/denials) as scrape-time views over a
+    :class:`repro.obs.MetricsRegistry`."""
+    insts = {}
+    if cache is not None:
+        insts["hits"] = registry.counter(
+            "retrieval_cache_hits_total", "shared retrieval LRU hits")
+        insts["lookups"] = registry.counter(
+            "retrieval_cache_lookups_total",
+            "shared retrieval LRU lookups")
+    for bname in sorted(breakers):
+        insts[f"trips_{bname}"] = registry.counter(
+            f"breaker_{bname}_trips_total",
+            f"circuit-breaker trips for retriever {bname}")
+        insts[f"denied_{bname}"] = registry.counter(
+            f"breaker_{bname}_denied_total",
+            f"calls denied by the {bname} breaker")
+        insts[f"open_{bname}"] = registry.gauge(
+            f"breaker_{bname}_open",
+            f"1 when the {bname} breaker is not closed")
+
+    def scrape() -> None:
+        if cache is not None:
+            insts["hits"].set_total(cache.hits)
+            insts["lookups"].set_total(cache.lookups)
+        for bname, brk in breakers.items():
+            insts[f"trips_{bname}"].set_total(brk.n_trips)
+            insts[f"denied_{bname}"].set_total(brk.n_denied)
+            insts[f"open_{bname}"].set(0.0 if brk.state == "closed"
+                                       else 1.0)
+
+    registry.register_collector(scrape)
 
 
 # ---------------------------------------------------------------------------

@@ -106,6 +106,15 @@ class SimulatorBackend:
         the Gateway mirrors its hit counters into GatewayStats."""
         return self.pipeline.retrieval_cache
 
+    def install_tracer(self, tracer) -> None:
+        """Adopt the Gateway's tracer: the pipeline notes retrieval
+        spans that the gateway adopts per submitted request."""
+        self.pipeline.tracer = tracer
+
+    def bind_metrics(self, registry) -> None:
+        from repro.retrieval.hybrid import bind_retrieval_metrics
+        bind_retrieval_metrics(registry, {}, self.pipeline.retrieval_cache)
+
     def execute_batch(self, questions: Sequence[Question],
                       action: Action) -> List[ActionOutcome]:
         return [self.pipeline.execute(q, action) for q in questions]

@@ -28,9 +28,10 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.data.synthetic_squad import Question
 from repro.data.tokenizer import HashTokenizer
 from repro.generation.prompts import REFUSAL_TEXT, build_prompt
+from repro.obs import NULL_TRACER
 from repro.retrieval.bm25 import BM25Index
-from repro.retrieval.hybrid import (Retriever, collect_breakers,
-                                    resolve_retrievers,
+from repro.retrieval.hybrid import (Retriever, bind_retrieval_metrics,
+                                    collect_breakers, resolve_retrievers,
                                     retrieve_with_fallback)
 from repro.routing.backends import StreamCompletion
 from repro.routing.registry import Action
@@ -43,6 +44,10 @@ REFUSE_COST_TOKENS = 5.0
 
 class EngineBackend:
     """Batched retrieval + real JAX generation for one action bucket."""
+
+    # telemetry: the Gateway installs its tracer here so retrieval and
+    # engine spans land in the same trace (no-op by default)
+    tracer = NULL_TRACER
 
     def __init__(self, engine: Engine, tokenizer: HashTokenizer,
                  index: BM25Index, *, max_prompt_len: int = 384,
@@ -64,6 +69,22 @@ class EngineBackend:
             retrievers, index, cache_size=retrieval_cache_size,
             chaos=chaos, breaker_kw=breaker_kw)
         self.breakers = collect_breakers(self.retrievers)
+
+    def install_tracer(self, tracer) -> None:
+        """Adopt the Gateway's tracer (called once at Gateway
+        construction); the engine shares it when it can carry one."""
+        self.tracer = tracer
+        if hasattr(self.engine, "tracer"):
+            self.engine.tracer = tracer
+
+    def bind_metrics(self, registry) -> None:
+        """Register this backend's stat sources (retrieval cache,
+        breakers, engine counters) as views over ``registry``."""
+        bind_retrieval_metrics(registry, self.breakers,
+                               self.retrieval_cache)
+        bind = getattr(self.engine, "bind_metrics", None)
+        if bind is not None:
+            bind(registry)
 
     def _retrieve(self, question: str, k: int,
                   retriever: str = "bm25") -> List[str]:
@@ -95,7 +116,8 @@ class EngineBackend:
                     f"action retriever {action.retriever!r} not "
                     f"configured; available: {sorted(self.retrievers)}")
             passages, degraded = retrieve_with_fallback(
-                self.retrievers, action.retriever, q.text, action.k)
+                self.retrievers, action.retriever, q.text, action.k,
+                tracer=self.tracer)
         hit = bool(q.gold_answer) and any(
             q.gold_answer in p for p in passages)
         prompt = build_prompt(action.mode, q.text, passages)
@@ -271,6 +293,10 @@ class ContinuousEngineBackend(EngineBackend):
                 else:
                     outcomes[i] = self._generated_outcome(
                         q, action, plen, gen.n_steps, hit, degraded)
+                # engine-clock stamps: the Gateway slices its dispatch
+                # window into prefill/decode spans with these
+                outcomes[i].admitted_at = gen.admitted_at
+                outcomes[i].finished_at = gen.finished_at
         return outcomes
 
     def execute_batch(self, questions: Sequence[Question],

@@ -32,6 +32,7 @@ from repro.core.config import RouterConfig
 from repro.core.features import state_vector
 from repro.core.serving_types import RequestOutcome
 from repro.data.synthetic_squad import Question
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.routing.backends import GenerationBackend, as_backend
 from repro.routing.policy import RoutingContext, RoutingDecision, RoutingPolicy
 from repro.routing.registry import (ActionSpace, get_action_space,
@@ -121,8 +122,19 @@ class Gateway:
                  max_batch: int = 16, adaptive_refusal: bool = True,
                  base_refusal_share: float = 0.6, budget_targets=None,
                  on_outcome: Optional[Callable] = None, retry=None,
-                 sleep: Optional[Callable[[float], None]] = None):
+                 sleep: Optional[Callable[[float], None]] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.policy = policy
+        # injectable clock for per-request latency spans (perf_counter
+        # default: monotonic, immune to NTP steps); the AsyncGateway
+        # passes its virtual/real clock through here so closed- and
+        # open-loop timing share one domain
+        self.clock = clock if clock is not None else time.perf_counter
+        # telemetry plane: a no-op tracer keeps the hot path branchless
+        # and allocation-free when tracing is off (see repro.obs.trace)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # bounded deadline-aware resubmission of transient-fault
         # outcomes (a repro.serving.faults.RetryPolicy; None disables —
         # the closed-loop default, keeping pre-fault behaviour
@@ -152,6 +164,47 @@ class Gateway:
         self.on_outcome = on_outcome
         self.stats = GatewayStats()
         self.queue: List[Request] = []
+        # hand the tracer to layers below the gateway (backend retrieval
+        # spans, engine prefill/decode-chunk spans)
+        install = getattr(self.backend, "install_tracer", None)
+        if install is not None and self.tracer.enabled:
+            install(self.tracer)
+        self.metrics = metrics
+        self._lat_hist = None
+        if metrics is not None:
+            self._bind_metrics(metrics)
+
+    def _bind_metrics(self, reg: MetricsRegistry) -> None:
+        """Register this gateway's stat blocks as scrape-time views over
+        one shared registry (GatewayStats, engine stats, page pool,
+        breakers, retrieval cache)."""
+        self._lat_hist = reg.histogram(
+            "gateway_request_latency_ms",
+            "end-to-end per-request latency (ms)")
+        fields = ("served", "rejected", "shed", "forced_refusals",
+                  "depth_clamped", "degraded", "timed_out", "retries",
+                  "faulted", "fatal_errors")
+        counters = {f: reg.counter(f"gateway_{f}_total") for f in fields}
+        reward_g = reg.gauge("gateway_avg_reward",
+                             "mean reward over served requests")
+        cap_g = reg.gauge("gateway_refusal_cap",
+                          "latest budget-actuated refusal cap")
+        queue_g = reg.gauge("gateway_queue_depth",
+                            "requests waiting in the submit queue")
+
+        def scrape() -> None:
+            st = self.stats
+            for f, inst in counters.items():
+                inst.set_total(getattr(st, f))
+            reward_g.set(st.avg_reward)
+            if st.refusal_cap_history:
+                cap_g.set(st.refusal_cap_history[-1])
+            queue_g.set(len(self.queue))
+
+        reg.register_collector(scrape)
+        bind = getattr(self.backend, "bind_metrics", None)
+        if bind is not None:
+            bind(reg)
 
     # ------------------------------------------------------------------
     def submit(self, reqs: Sequence[Request]) -> None:
@@ -184,6 +237,8 @@ class Gateway:
         self.budget.record(outcome)
         self.stats.served += 1
         self.stats.latency.record(lat_ms)
+        if self._lat_hist is not None:
+            self._lat_hist.observe(lat_ms)
         if getattr(out, "rejected", False):
             self.stats.rejected += 1
         if getattr(out, "degraded", False):
@@ -236,12 +291,38 @@ class Gateway:
                 outs[i] = o
         return outs
 
+    def _finish_trace(self, r: Request, out, t_disp: float,
+                      t_done: float) -> None:
+        """Mark engine-stamped stages + close one request's span tree.
+        ``admitted_at``/``finished_at`` are engine-clock stamps; when
+        the engine shares the gateway clock (the default) they slice
+        dispatch→done into prefill/decode/harvest, otherwise they are
+        clamped into the dispatch window rather than trusted."""
+        tr = self.tracer
+        fin = getattr(out, "finished_at", 0.0)
+        adm = getattr(out, "admitted_at", 0.0)
+        fin = fin if t_disp < fin <= t_done else t_done
+        adm = min(max(adm, t_disp), fin)
+        tr.mark(r.qid, "prefill", t_disp, adm)
+        tr.mark(r.qid, "decode", adm, fin)
+        tr.mark(r.qid, "harvest", fin, t_done)
+        if getattr(out, "timed_out", False):
+            kind = "timed_out"
+        elif getattr(out, "transient", False):
+            kind = "faulted"
+        else:
+            kind = "completed"
+        tr.finish_request(r.qid, kind, t=t_done,
+                          cost_tokens=out.cost_tokens)
+
     def step(self) -> Optional[GatewayStats]:
         """Serve one micro-batch off the queue."""
         if not self.queue:
             return None
         batch, self.queue = self.queue[: self.max_batch], \
             self.queue[self.max_batch:]
+        tr = self.tracer
+        t_pop = tr.now()
         decision, cap = self._route(batch)
         # only log the cap when the policy actually enforced it — a
         # logit-less policy (e.g. FixedPolicy) cannot demote refusals,
@@ -252,18 +333,38 @@ class Gateway:
 
         if hasattr(self.backend, "execute_mixed"):
             # continuous backend: the whole routed micro-batch — every
-            # action bucket — feeds one shared in-flight decode stream
+            # action bucket — feeds one shared in-flight decode stream.
             acts = [int(a) for a in decision.actions]
-            # perf_counter: monotonic — wall clock can step backwards
-            # under NTP adjustment and produce negative latency_ms
-            t0 = time.perf_counter()
+            # self.clock defaults to perf_counter: monotonic — wall
+            # clock can step backwards under NTP adjustment and produce
+            # negative latency_ms
+            t_disp = self.clock()
+            if tr.enabled:
+                for r in batch:
+                    tr.begin_request(r.qid, t_pop)
+                    tr.mark(r.qid, "queue_wait", t_pop, t_pop)
+                    tr.mark(r.qid, "admission", t_pop, t_disp)
             outs = self.backend.execute_mixed(
                 [r.question for r in batch],
                 [self.space[a] for a in acts])
             outs = self._retry_transients(batch, acts, outs,
                                           self.backend.execute_mixed)
-            lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(batch), 1)
+            t_done = self.clock()
+            # retrieval notes from batched _prep calls interleave across
+            # the micro-batch and cannot be attributed per-request here
+            # (the streaming path adopts them per submit)
+            tr.discard_pending()
+            wall_ms = (t_done - t_disp) * 1e3
             for r, a, out in zip(batch, acts, outs):
+                # true per-request completion span when the engine
+                # stamped one (dispatch → finished_at); full batch wall
+                # otherwise — never the old wall/len smear, which under-
+                # reported every request in a slow micro-batch
+                fin = getattr(out, "finished_at", 0.0)
+                lat_ms = ((fin - t_disp) * 1e3
+                          if t_disp < fin <= t_done else wall_ms)
+                if tr.enabled:
+                    self._finish_trace(r, out, t_disp, t_done)
                 self._account(r, a, out, lat_ms)
             self._sync_cache_stats()
             return self.stats
@@ -276,7 +377,7 @@ class Gateway:
 
         for a, idxs in sorted(buckets.items()):
             action = self.space[a]
-            t0 = time.perf_counter()
+            t_disp = self.clock()
             outs = self.backend.execute_batch(
                 [batch[i].question for i in idxs], action)
             if self.retry is not None:
@@ -284,9 +385,19 @@ class Gateway:
                     [batch[i] for i in idxs], [a] * len(idxs), outs,
                     lambda qs, actions: self.backend.execute_batch(
                         qs, actions[0]))
-            lat_ms = (time.perf_counter() - t0) * 1e3 / max(len(idxs), 1)
+            t_done = self.clock()
+            tr.discard_pending()
+            # each request in the bucket experienced the full bucket
+            # call, so it gets the full wall — not wall/len
+            wall_ms = (t_done - t_disp) * 1e3
             for i, out in zip(idxs, outs):
-                self._account(batch[i], a, out, lat_ms)
+                r = batch[i]
+                if tr.enabled:
+                    tr.begin_request(r.qid, t_pop)
+                    tr.mark(r.qid, "queue_wait", t_pop, t_pop)
+                    tr.mark(r.qid, "admission", t_pop, t_disp)
+                    self._finish_trace(r, out, t_disp, t_done)
+                self._account(r, a, out, wall_ms)
         self._sync_cache_stats()
         return self.stats
 

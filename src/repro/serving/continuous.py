@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.errors import TransientFaultError
 from repro.data.tokenizer import PAD
+from repro.obs import NULL_TRACER
 
 
 @dataclass
@@ -127,6 +128,11 @@ class ContinuousEngine:
     the executor protocol; the fake in the scheduler tests is numpy).
     """
 
+    # telemetry: the Gateway's tracer lands here via the backend's
+    # install_tracer (engine decode-chunk / prefill-dispatch spans);
+    # the default is the zero-overhead no-op
+    tracer = NULL_TRACER
+
     def __init__(self, model=None, params=None, *, num_slots: int = 8,
                  max_len: int = 512, max_new_cap: int = 64,
                  sync_every: int = 4, prefill_pad_multiple: int = 1,
@@ -136,7 +142,7 @@ class ContinuousEngine:
                  watchdog_syncs: int = 8, max_requeues: int = 0,
                  chaos=None, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, metrics=None):
         if executor is None:
             if model is None:
                 raise ValueError("ContinuousEngine needs model+params or "
@@ -147,7 +153,8 @@ class ContinuousEngine:
                       max_new_cap=max_new_cap, sync_every=sync_every,
                       prefill_batch=prefill_batch, moe_fn=moe_fn,
                       mla_absorb=mla_absorb, paged=paged,
-                      page_size=page_size, num_pages=num_pages)
+                      page_size=page_size, num_pages=num_pages,
+                      metrics=metrics)
             executor = (ShardedExecutor(model, params, mesh=mesh, **kw)
                         if mesh is not None
                         else SingleDeviceExecutor(model, params, **kw))
@@ -215,6 +222,44 @@ class ContinuousEngine:
         self._results: Dict[int, CompletedGeneration] = {}
         self._admitted_at: Dict[int, float] = {}
         self._auto_rid = 0
+        self._bound_registries: Set[int] = set()
+        if metrics is not None:
+            self.bind_metrics(metrics)
+
+    def bind_metrics(self, registry) -> None:
+        """Register :class:`EngineStats` (and the page pool, when
+        paged) as scrape-time views over ``registry``.  Idempotent per
+        registry so the Gateway's bind and a constructor-passed
+        registry don't double-register the names."""
+        if id(registry) in self._bound_registries:
+            return
+        self._bound_registries.add(id(registry))
+        fields = ("n_admitted", "n_completed", "n_rejected", "n_prefills",
+                  "n_decode_chunks", "n_decode_steps", "n_quarantined",
+                  "n_nan_trips", "n_watchdog_trips", "n_exec_faults",
+                  "n_requeued", "n_timed_out", "n_deferred_admissions",
+                  "n_pages_evicted", "n_cow_forks",
+                  "prefill_tokens_avoided", "prompt_tokens_total")
+        counters = {f: registry.counter(f"engine_{f}_total")
+                    for f in fields}
+        concur_g = registry.gauge("engine_concurrent_slots",
+                                  "resident requests right now")
+        max_concur_g = registry.gauge("engine_max_concurrent",
+                                      "peak resident requests")
+        queue_g = registry.gauge("engine_queue_depth",
+                                 "requests queued for admission")
+
+        def scrape() -> None:
+            st = self.stats
+            for f, inst in counters.items():
+                inst.set_total(getattr(st, f))
+            concur_g.set(self.n_resident)
+            max_concur_g.set(st.max_concurrent)
+            queue_g.set(len(self._queue))
+
+        registry.register_collector(scrape)
+        if self._pages is not None:
+            self._pages.bind_metrics(registry)
 
     # -- submission ----------------------------------------------------
 
@@ -389,6 +434,7 @@ class ContinuousEngine:
                         self._queue.appendleft(req)
                     self.stats.n_deferred_admissions += 1
                     break
+            t_adm0 = self.tracer.now()
             try:
                 if plans is not None:
                     self._dispatch_paged(toks, slot_idx, limits, plans)
@@ -417,6 +463,9 @@ class ContinuousEngine:
                 self.stats.n_cow_forks = self._pages.n_cow_forks
                 self.stats.n_pages_evicted = self._pages.n_evicted
             self.stats.n_prefills += 1
+            self.tracer.engine_span("prefill_dispatch", t_adm0,
+                                    self.tracer.now(), n=len(group),
+                                    plen=int(plen))
             now = self._clock()
             for req, slot in zip(group, slots):
                 self.stats.n_admitted += 1
@@ -665,6 +714,8 @@ class ContinuousEngine:
             # decode chunk first (async), then overlap the next
             # admission groups' prefills with it; block only at the
             # control sync
+            tr = self.tracer
+            t_chunk0 = tr.now()
             try:
                 self.executor.decode_chunk()
             except TransientFaultError as exc:
@@ -675,6 +726,10 @@ class ContinuousEngine:
             self.stats.n_decode_steps += self.sync_every
             self._start_admissions()
             self._sync()
+            # dispatch→post-sync wall of this K-step chunk (the prefills
+            # overlapped above render as nested engine-track spans)
+            tr.engine_span("decode_chunk", t_chunk0, tr.now(),
+                           steps=self.sync_every)
             self._check_health()
             self._expire_residents()
             self._harvest()

@@ -67,6 +67,7 @@ numpy fake):
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional
 
 import jax
@@ -88,7 +89,7 @@ class SingleDeviceExecutor:
                  moe_fn: Optional[Callable] = None,
                  mla_absorb: bool = False, health_checks: bool = True,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, metrics=None):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -135,6 +136,27 @@ class SingleDeviceExecutor:
 
         self._place()
         self._compile()
+
+        # device-dispatch wall histograms (repro.obs) — None keeps the
+        # hot path at a single attribute check per dispatch
+        self._m_admit = None
+        self._m_decode = None
+        if metrics is not None:
+            self.bind_metrics(metrics)
+
+    def bind_metrics(self, registry) -> None:
+        """Register admit / decode-chunk host dispatch walls.  These
+        are genuine wall-clock measurements of async dispatch overhead
+        (not virtual-time), hence perf_counter rather than the engine
+        clock."""
+        bounds = (0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0,
+                  10.0, 20.0, 50.0, 100.0)
+        self._m_admit = registry.histogram(
+            "executor_admit_dispatch_ms",
+            "host wall of one prefill+commit dispatch", bounds)
+        self._m_decode = registry.histogram(
+            "executor_decode_dispatch_ms",
+            "host wall of one K-step decode-chunk dispatch", bounds)
 
     def _validate_pages(self) -> None:
         per = self.num_pages // max(self.page_partitions, 1)
@@ -348,6 +370,7 @@ class SingleDeviceExecutor:
         behind that chunk by its data dependency on the slot cache."""
         if self.paged:
             raise RuntimeError("paged executor: use admit_paged()")
+        t0 = time.perf_counter() if self._m_admit is not None else 0.0
         firsts, self._pcache = self._prefill(
             self.params, self._pcache, self._tokens_to_device(tokens))
         (self._cache, self._dtok, self._dactive, self._dgen, self._dlimit,
@@ -356,6 +379,8 @@ class SingleDeviceExecutor:
             self._dgen, self._dlimit, self._dout,
             self._host_to_device(slot_idx), firsts,
             self._host_to_device(limits))
+        if self._m_admit is not None:
+            self._m_admit.observe((time.perf_counter() - t0) * 1e3)
 
     def admit_paged(self, tokens: np.ndarray, slot_idx: np.ndarray,
                     limits: np.ndarray, pos0: np.ndarray,
@@ -373,6 +398,7 @@ class SingleDeviceExecutor:
         in-flight decode chunk (miss admissions overlap as before)."""
         if not self.paged:
             raise RuntimeError("dense executor: use admit()")
+        t0 = time.perf_counter() if self._m_admit is not None else 0.0
         if int(gather_src.min(initial=self.num_pages)) < self.num_pages:
             self._pcache = self._gather(
                 self._cache, self._pcache,
@@ -388,12 +414,17 @@ class SingleDeviceExecutor:
             self._host_to_device(limits),
             self._host_to_device(np.ascontiguousarray(tables)),
             self._host_to_device(np.ascontiguousarray(write_mask)))
+        if self._m_admit is not None:
+            self._m_admit.observe((time.perf_counter() - t0) * 1e3)
 
     def decode_chunk(self) -> None:
+        t0 = time.perf_counter() if self._m_decode is not None else 0.0
         (self._cache, self._dtok, self._dactive, self._dgen,
          self._dout, self._dbad) = self._decode(
             self.params, self._cache, self._dtok, self._dactive,
             self._dgen, self._dlimit, self._dout, self._dbad)
+        if self._m_decode is not None:
+            self._m_decode.observe((time.perf_counter() - t0) * 1e3)
 
     def sync_control(self):
         """The every-K host sync: only the two tiny control arrays come

@@ -111,6 +111,29 @@ class PagePool:
         self.n_evicted = 0
         self.n_cow_forks = 0
 
+    def bind_metrics(self, registry) -> None:
+        """Register pool occupancy / prefix-cache / eviction gauges as
+        scrape-time views over a :class:`repro.obs.MetricsRegistry`."""
+        in_use_g = registry.gauge("pagepool_pages_in_use",
+                                  "pool pages with a live reference")
+        free_g = registry.gauge("pagepool_pages_free",
+                                "free pages across all partitions")
+        cached_g = registry.gauge("pagepool_prefix_cached_pages",
+                                  "pages held by the prefix cache")
+        evicted_c = registry.counter("pagepool_evictions_total",
+                                     "prefix-cache LRU evictions")
+        cow_c = registry.counter("pagepool_cow_forks_total",
+                                 "mid-page copy-on-write forks")
+
+        def scrape() -> None:
+            in_use_g.set(self.pages_in_use)
+            free_g.set(sum(len(f) for f in self._free))
+            cached_g.set(sum(len(c) for c in self._prefix))
+            evicted_c.set_total(self.n_evicted)
+            cow_c.set_total(self.n_cow_forks)
+
+        registry.register_collector(scrape)
+
     # -- allocator core -------------------------------------------------
 
     def n_free(self, partition: int = 0) -> int:

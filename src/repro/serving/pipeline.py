@@ -17,6 +17,7 @@ from repro.core.actions import Action
 from repro.routing.registry import ActionSpace, get_action_space
 from repro.data.synthetic_squad import Question
 from repro.generation.simulator import SimulatedGenerator
+from repro.obs import NULL_TRACER
 from repro.retrieval.bm25 import BM25Index
 from repro.retrieval.hybrid import (Retriever, resolve_retrievers,
                                     retrieve_with_fallback)
@@ -47,12 +48,23 @@ class ActionOutcome:
     degraded: bool = False
     timed_out: bool = False
     transient: bool = False
+    # engine-clock stamps (0.0 = backend doesn't stamp): when the
+    # continuous engine served this request, prefill completion and
+    # generation finish — the Gateway's tracer slices its dispatch
+    # window into prefill/decode spans with these instead of smearing
+    # batch wall time across requests
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
 
     def to_row(self) -> dict:
         return asdict(self)
 
 
 class RAGPipeline:
+    # telemetry: the owning backend installs the Gateway's tracer here
+    # so retrieval spans are noted into the request trace (no-op default)
+    tracer = NULL_TRACER
+
     def __init__(self, index: BM25Index, generator: SimulatedGenerator,
                  retrievers: Optional[Mapping[str, Retriever]] = None,
                  *, retrieval_cache_size: int = 0):
@@ -90,7 +102,7 @@ class RAGPipeline:
                 f"action retriever {retriever!r} not configured; "
                 f"available: {sorted(self.retrievers)}")
         return retrieve_with_fallback(self.retrievers, retriever,
-                                      question, k)
+                                      question, k, tracer=self.tracer)
 
     def execute(self, q: Question, action: Action) -> ActionOutcome:
         if action.mode == "refuse":

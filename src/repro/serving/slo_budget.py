@@ -30,6 +30,7 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.core.serving_types import RequestOutcome
+from repro.obs.attribution import RequestBreakdown, StageAttribution
 
 # ``refusal_cap_adjustment`` shape constants (previously inline magic
 # numbers) — overridable per tracker:
@@ -149,10 +150,20 @@ class SLOBudgetTracker:
         self.burn_knee = burn_knee
         self.burn_slope = burn_slope
         self.burn_clip = burn_clip
+        # windowed per-stage latency attribution (fed by the tracer):
+        # lets a burn-rate report say WHERE the latency went, not only
+        # that the budget burned
+        self.attribution = StageAttribution()
 
     def record(self, outcome: RequestOutcome) -> None:
         for s in self.states.values():
             s.record(outcome)
+
+    def record_breakdown(self, bd: Optional[RequestBreakdown]) -> None:
+        """Attach one request's per-stage breakdown (None-safe: the
+        disabled tracer produces no breakdowns)."""
+        if bd is not None:
+            self.attribution.record(bd)
 
     def report(self) -> Dict[str, BudgetReport]:
         return {name: BudgetReport(
@@ -165,8 +176,13 @@ class SLOBudgetTracker:
                 for name, s in self.states.items()}
 
     def report_dict(self) -> Dict[str, Dict[str, object]]:
-        """JSON-serializable form of :meth:`report`."""
-        return {name: rep.as_dict() for name, rep in self.report().items()}
+        """JSON-serializable form of :meth:`report`, plus the windowed
+        latency attribution (which stage dominates recent requests)
+        when any breakdowns have been recorded."""
+        out = {name: rep.as_dict() for name, rep in self.report().items()}
+        if len(self.attribution):
+            out["latency_attribution"] = self.attribution.report()
+        return out
 
     def burn_rate(self, name: str, window: Optional[int] = None) -> float:
         """Short-window burn for one target (0.0 if untracked)."""

@@ -51,6 +51,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 from collections import deque
 
 from repro.core.errors import TransientFaultError
+from repro.obs import RequestBreakdown
 from repro.routing.gateway import Gateway, GatewayStats, Request
 from repro.routing.registry import Action, ActionSpace
 from repro.serving.faults import RetryPolicy
@@ -104,10 +105,17 @@ class StreamHandle:
     # set when the gateway itself died (backend raised a non-transient
     # exception): result() re-raises it instead of returning an outcome
     error: Optional[BaseException] = None
+    # per-stage latency attribution (queue_wait/admission/retrieval/
+    # prefill/decode/harvest) — set at completion when tracing is on
+    breakdown: Optional[RequestBreakdown] = None
     _event: threading.Event = field(default_factory=threading.Event)
     # gateway-internal: routed action + whether burn forced the refusal
     _action: int = -1
     _forced: bool = False
+    # gateway-internal trace stamps: popped off the arrival queue /
+    # handed to the backend stream (gateway-clock seconds; 0 = not yet)
+    _pop_t: float = 0.0
+    _dispatch_t: float = 0.0
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -189,9 +197,11 @@ class AsyncGateway(Gateway):
         # fires, so this is parity-safe; pass retry=None to disable
         if retry is _DEFAULT_RETRY:
             retry = RetryPolicy(max_retries=1)
-        super().__init__(policy, backend, retry=retry, **gateway_kw)
+        # the clock goes through the base Gateway so closed-loop spans,
+        # the tracer, and open-loop stamps all share one time domain
+        super().__init__(policy, backend, retry=retry, clock=clock,
+                         **gateway_kw)
         self.admission = admission or AdmissionConfig()
-        self.clock = clock if clock is not None else time.perf_counter
         # default per-request deadline (ms) stamped at submission when
         # the request doesn't carry one; 0 = no deadline
         self.deadline_ms = float(deadline_ms)
@@ -244,6 +254,10 @@ class AsyncGateway(Gateway):
             failed = self._failed
             if failed is None:
                 self._arrivals.append(handle)
+                # root span opens at arrival: queueing delay is part of
+                # what the trace must attribute (tracer state is only
+                # ever touched under the pump lock)
+                self.tracer.begin_request(request.qid, now)
         if failed is not None:
             # a dead gateway must not hand out handles that never
             # complete: reject immediately with the fatal error
@@ -357,16 +371,29 @@ class AsyncGateway(Gateway):
         ``faulted`` outcome once the budget is spent).  Lock held."""
         h._action = a
         h._forced = forced
+        tr = self.tracer
         try:
             rid, immediate = self.backend.stream_submit(
                 h.request.question, self.space[a],
                 deadline_at=self._deadline_at(h))
         except TransientFaultError as exc:
+            # dispatch stamp + adoption of any retrieval note the
+            # backend recorded before faulting: the admission span must
+            # cover the failed attempt too
+            h._dispatch_t = tr.now()
+            tr.adopt(h.request.qid)
             if not self._try_schedule_retry(h, now):
                 t = self.clock()
                 self._account_stream(h, a, self._fault_outcome(
                     h.request, a, str(exc)), t, t, forced=forced)
             return
+        # admission ends when the request is IN the backend stream —
+        # retrieval ran inside stream_submit, so the retrieval note the
+        # backend just recorded nests inside the admission interval.
+        # The backend doesn't know our qid (request ids are per-stream),
+        # hence note→adopt rather than a direct mark.
+        h._dispatch_t = tr.now()
+        tr.adopt(h.request.qid)
         if immediate is not None:
             t = self.clock()
             self._account_stream(h, a, immediate, t, t, forced=forced)
@@ -418,9 +445,18 @@ class AsyncGateway(Gateway):
             admitted: List[StreamHandle] = []
             now = self.clock()
             backlog = self.backend.stream_backlog + len(self._in_flight)
+            tr = self.tracer
             for h in batch:
+                h._pop_t = now
                 if self._should_shed(h, now, backlog + len(admitted)):
                     self.stats.shed += 1
+                    # a shed request spent its whole life queued: its
+                    # breakdown is pure queue_wait, stage sum == e2e
+                    tr.mark(h.request.qid, "queue_wait",
+                            h.arrival_t, now)
+                    h.breakdown = tr.finish_request(
+                        h.request.qid, "shed", t=now)
+                    self.budget.record_breakdown(h.breakdown)
                     h._complete(self._shed_outcome(h.request), now,
                                 shed=True)
                     n_events += 1
@@ -487,6 +523,9 @@ class AsyncGateway(Gateway):
         now = self.clock()
         for h in victims:
             h.error = exc
+            # close the victim's trace so no span is left open (the
+            # well-formedness audit treats open spans as defects)
+            self.tracer.finish_request(h.request.qid, "faulted", t=now)
             # completed-but-errored, NOT accounted: the gateway's stats
             # describe what it served, and it served nothing here
             h._complete(self._fault_outcome(
@@ -499,6 +538,41 @@ class AsyncGateway(Gateway):
         (arrival -> completion, queueing included) — unlike the
         closed-loop path's per-batch mean."""
         lat_ms = (finished_t - h.arrival_t) * 1e3
+        tr = self.tracer
+        if tr.enabled:
+            # contiguous stage chain: arrival →(queue_wait)→ pop
+            # →(admission)→ dispatch →(prefill)→ first token →(decode)→
+            # engine finish →(harvest)→ here.  Stamps are clamped into
+            # monotone order so a missing stamp (immediate refusal,
+            # fault before dispatch) collapses its stage to zero width
+            # instead of corrupting the tree — the top-level stage sum
+            # equals end-to-end latency by construction.
+            qid = h.request.qid
+            t_acc = tr.now()
+            arr = h.arrival_t
+            fin = max(finished_t, arr)
+            t_acc = max(t_acc, fin)
+            pop = min(max(h._pop_t, arr) if h._pop_t else arr, fin)
+            disp = min(max(h._dispatch_t, pop) if h._dispatch_t else pop,
+                       fin)
+            ft = first_token_t if first_token_t else disp
+            ft = min(max(ft, disp), fin)
+            tr.mark(qid, "queue_wait", arr, pop)
+            tr.mark(qid, "admission", pop, disp)
+            tr.mark(qid, "prefill", disp, ft)
+            tr.mark(qid, "decode", ft, fin)
+            # harvest: the completion sat in the engine's done list
+            # until this pump iteration polled it
+            tr.mark(qid, "harvest", fin, t_acc)
+            if getattr(out, "timed_out", False):
+                kind = "timed_out"
+            elif getattr(out, "transient", False):
+                kind = "faulted"
+            else:
+                kind = "completed"
+            h.breakdown = tr.finish_request(
+                qid, kind, t=t_acc, cost_tokens=out.cost_tokens)
+            self.budget.record_breakdown(h.breakdown)
         self._account(h.request, a, out, lat_ms)
         h._complete(out, finished_t, forced=forced,
                     first_token_t=first_token_t)

@@ -174,6 +174,9 @@ class LoadReport:
         default_factory=lambda: LatencyReservoir())
     first_token: LatencyReservoir = field(
         default_factory=lambda: LatencyReservoir())
+    # per-stage latency percentiles from the gateway's tracer, keyed
+    # stage -> {n, p50_ms, p99_ms}; empty when tracing is disabled
+    stages: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     @property
     def offered_rate(self) -> float:
@@ -214,6 +217,8 @@ class LoadReport:
             d[f"latency_{k}"] = v
         for k, v in self.first_token.percentiles().items():
             d[f"first_token_{k}"] = v
+        if self.stages:
+            d["stages"] = self.stages
         return d
 
 
@@ -277,6 +282,9 @@ class LoadGenerator:
                 rep.answered += 1
                 if h.deadline_met:
                     rep.deadline_met += 1
+        tracer = getattr(self.gateway, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            rep.stages = tracer.stage_percentiles()
         return rep
 
     # -- virtual-time (deterministic) ---------------------------------

@@ -1,0 +1,55 @@
+"""RPL007 fixture: metric names, duplicate registration, clock injection."""
+from repro.obs import MetricsRegistry, NullTracer, Tracer
+
+
+def good_binding(registry):
+    served = registry.counter("gateway_served_total", "requests served")
+    registry.gauge("queue_depth", "pending requests")
+    registry.histogram("request_latency_ms", "per-request latency")
+    return served
+
+
+def bad_name_case(registry):
+    return registry.counter("GatewayServed", "camel case")   # finding
+
+
+def bad_name_dash(registry):
+    return registry.gauge("queue-depth", "kebab case")       # finding
+
+
+def bad_duplicate(registry):
+    registry.counter("served_total", "first registration")
+    registry.counter("served_total", "second: would raise")  # finding
+
+
+def good_two_registries(reg_a, reg_b):
+    # same name on DIFFERENT registries is fine
+    reg_a.counter("served_total", "a's view")
+    reg_b.counter("served_total", "b's view")
+
+
+def good_dynamic_name(registry, breaker_name):
+    # f-string names are validated at runtime by the registry
+    return registry.counter(f"breaker_{breaker_name}_trips_total", "trips")
+
+
+def good_clocked(clock):
+    tracer = Tracer(clock)
+    registry = MetricsRegistry(clock, prefix="repro_")
+    return tracer, registry
+
+
+def good_clock_kwarg(clock):
+    return Tracer(clock=clock)
+
+
+def good_null_tracer():
+    return NullTracer()          # no-op tracer never reads a clock
+
+
+def bad_clockless_tracer():
+    return Tracer()              # finding
+
+
+def bad_clockless_registry():
+    return MetricsRegistry()     # finding

@@ -19,7 +19,7 @@ FIXTURES = REPO / "tests" / "fixtures" / "lint"
 
 def test_src_tree_has_zero_unsuppressed_findings():
     """The CI gate: ``python -m repro.analysis src --fail-on-findings``
-    exits 0 on the repo's own source with all six rules active."""
+    exits 0 on the repo's own source with all seven rules active."""
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
     proc = subprocess.run(
         [sys.executable, "-m", "repro.analysis", "src",
@@ -69,7 +69,7 @@ def test_cli_list_rules(capsys):
     assert main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for rid in ("RPL001", "RPL002", "RPL003", "RPL004", "RPL005",
-                "RPL006"):
+                "RPL006", "RPL007"):
         assert rid in out
 
 

@@ -38,9 +38,10 @@ def src_line(name: str, lineno: int) -> str:
     return (FIXTURES / name).read_text().splitlines()[lineno - 1]
 
 
-def test_registry_has_all_six_rules():
+def test_registry_has_all_seven_rules():
     assert sorted(all_rules()) == [
-        "RPL001", "RPL002", "RPL003", "RPL004", "RPL005", "RPL006"]
+        "RPL001", "RPL002", "RPL003", "RPL004", "RPL005", "RPL006",
+        "RPL007"]
 
 
 def test_clean_fixture_has_no_findings():
@@ -164,6 +165,38 @@ def test_rpl006_flags_swallowing_handlers_only():
     srcs = [src_line("rpl006_except.py", f.line) for f in hits]
     assert any("except Exception:" in s for s in srcs)
     assert any(s.strip().startswith("except:") for s in srcs)
+
+
+# -- RPL007 metric-hygiene --------------------------------------------------
+
+
+def test_rpl007_flags_bad_names_duplicates_and_clockless():
+    res = lint("rpl007_metrics.py")
+    hits = by_rule(res, "RPL007")
+    assert len(hits) == 5
+    srcs = [src_line("rpl007_metrics.py", f.line) for f in hits]
+    assert any("GatewayServed" in s for s in srcs)
+    assert any("queue-depth" in s for s in srcs)
+    dup = [f for f in hits if "registered twice" in f.message]
+    assert len(dup) == 1 and "served_total" in dup[0].message
+    clockless = [f for f in hits if "clock" in f.message]
+    assert len(clockless) == 2
+    assert {("Tracer()" in src_line("rpl007_metrics.py", f.line)
+             or "MetricsRegistry()" in src_line("rpl007_metrics.py",
+                                                f.line))
+            for f in clockless} == {True}
+
+
+def test_rpl007_negatives_stay_quiet():
+    res = lint("rpl007_metrics.py")
+    srcs = [src_line("rpl007_metrics.py", f.line)
+            for f in by_rule(res, "RPL007")]
+    # f-string names, clocked constructions, NullTracer(), and the
+    # same-name-different-registry pair all pass
+    assert not any("breaker_" in s for s in srcs)
+    assert not any("NullTracer" in s for s in srcs)
+    assert not any("reg_a" in s or "reg_b" in s for s in srcs)
+    assert not any("Tracer(clock" in s for s in srcs)
 
 
 # -- suppression machinery --------------------------------------------------
